@@ -1,0 +1,57 @@
+"""Train-step wall time on CPU (reduced configs): gspmd vs mrd_zero1 vs
+compressed grad sync, and the monitor's overhead.
+
+CSV: name,us_per_call,derived
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.distributed import step as step_lib
+from repro.optim.optimizer import OptimizerConfig
+
+
+def time_mode(grad_sync, monitor, steps=5):
+    cfg = registry.get_smoke_config("llama3.2-1b")
+    mesh = jax.make_mesh(
+        (1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+    tcfg = step_lib.TrainConfig(
+        microbatches=1, remat="none", grad_sync=grad_sync, monitor=monitor,
+        optimizer=OptimizerConfig(lr=1e-3, schedule="const", warmup_steps=0),
+    )
+    train_step, init_state, state_specs, _ = step_lib.make_train_step(cfg, mesh, tcfg)
+    with mesh:
+        state = init_state(jax.random.PRNGKey(0))
+        pipe = SyntheticPipeline(cfg, DataConfig(batch=4, seq_len=64, seed=0))
+        js = jax.jit(train_step)
+        batch = pipe.next_batch()
+        state, _ = js(state, batch)  # compile
+        jax.block_until_ready(state)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            state, m = js(state, pipe.next_batch())
+        jax.block_until_ready(state)
+        us = (time.perf_counter() - t0) / steps * 1e6
+    return us, float(m["loss"])
+
+
+def main():
+    rows = []
+    for gs in ("gspmd", "mrd_zero1", "compressed"):
+        us, loss = time_mode(gs, monitor=True)
+        rows.append((f"train_step_{gs}_mon", round(us, 0), round(loss, 3)))
+    us_nomon, _ = time_mode("gspmd", monitor=False)
+    us_mon, _ = time_mode("gspmd", monitor=True)
+    rows.append(("monitor_overhead_us", round(us_mon - us_nomon, 0), "staged, non-blocking"))
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

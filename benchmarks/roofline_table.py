@@ -1,0 +1,86 @@
+"""Roofline table: joins the production dry-run (memory, structure) with the
+loop-calibrated cost fits (flops / bytes / collective bytes) and prints the
+three-term roofline per (arch x shape) — EXPERIMENTS.md §Roofline reads this.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline_table \\
+      [--dryrun results/dryrun] [--cal results/calibrate] [--mesh single] [--json out.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import registry, shapes
+from repro.launch import roofline as R
+
+
+def load(dryrun_dir, cal_dir, mesh):
+    reports = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        prod = json.load(open(f))
+        if "error" in prod or "skipped" in prod:
+            continue
+        arch, shape = prod["arch"], prod["shape"]
+        cal_path = os.path.join(cal_dir, f"{arch}__{shape}__{mesh}.json")
+        cal = None
+        if os.path.exists(cal_path):
+            c = json.load(open(cal_path))
+            cal = c.get("calibrated")
+        cfg = registry.get_config(arch)
+        cell = shapes.SHAPES[shape]
+        if cal:
+            flops, byts, coll = cal["flops"], cal["bytes"], cal["coll"]
+            calibrated = True
+        else:  # fall back to raw (loop-undercounted) production numbers
+            flops = prod["cost"].get("flops") or 0.0
+            byts = prod["cost"].get("bytes_accessed") or 0.0
+            coll = prod.get("collective_bytes", {})
+            calibrated = False
+        rep = R.RooflineReport(
+            arch=arch,
+            shape=shape,
+            mesh=mesh,
+            chips=prod.get("chips", 256),
+            hlo_flops=flops,
+            hlo_bytes=byts,
+            collective_bytes={k: int(v) for k, v in coll.items()},
+            model_flops=R.model_flops_for(cfg, cell),
+            peak_memory_bytes=(
+                (prod.get("memory", {}).get("temp_bytes_tpu_adjusted") or 0)
+                + (prod.get("memory", {}).get("argument_bytes") or 0)
+            ),
+            compile_seconds=prod.get("compile_seconds"),
+        )
+        rep._calibrated = calibrated  # annotate
+        reports.append(rep)
+    return reports
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun")
+    ap.add_argument("--cal", default="results/calibrate")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    reports = load(args.dryrun, args.cal, args.mesh)
+    print(R.format_table(reports))
+    ncal = sum(1 for r in reports if getattr(r, "_calibrated", False))
+    print(f"\n({ncal}/{len(reports)} cells loop-calibrated; HBM fit uses "
+          f"temp_bytes_tpu_adjusted + args, v5e budget 16 GB/chip)")
+    over = [
+        r for r in reports
+        if r.peak_memory_bytes and r.peak_memory_bytes > 16e9
+    ]
+    for r in over:
+        print(f"  OVER-BUDGET: {r.arch}/{r.shape}: {r.peak_memory_bytes/1e9:.1f} GB")
+    if args.json:
+        R.save_reports(reports, args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Benchmark harness: one module per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows from every bench.  The roofline
+table (dry-run derived) is produced by ``benchmarks.roofline_table`` and reads
+results/dryrun + results/calibrate.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_compression, bench_detection, bench_mrd, bench_train_step
+
+    print("name,us_per_call,derived")
+    for mod in (bench_mrd, bench_detection, bench_compression, bench_train_step):
+        print(f"# --- {mod.__name__} ---", file=sys.stderr)
+        mod.main()
+
+
+if __name__ == "__main__":
+    main()

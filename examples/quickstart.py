@@ -1,0 +1,46 @@
+"""Quickstart: the paper's primitives in 60 lines.
+
+1. MRD Allreduce for a non-power-of-two group (sim executor).
+2. The non-blocking statechart: one stage per call, overlap with 'compute'.
+3. Exact (snapshot-certified) convergence detection of an asynchronous
+   Jacobi solve of the paper's 1-D boundary-value problem.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import async_engine, mrd, nonblocking, solvers
+from repro.core.topology import paper_message_count, paper_step_count
+
+# --- 1. modified recursive doubling, p = 6 (non-power-of-two) --------------
+p = 6
+x = jnp.arange(p * 4, dtype=jnp.float32).reshape(p, 4)
+out = mrd.sim_allreduce(x, op="sum")
+np.testing.assert_allclose(np.asarray(out[0]), np.asarray(x.sum(0)))
+print(f"MRD allreduce p={p}: {paper_step_count(p)} steps, "
+      f"{paper_message_count(p)} messages (paper: log2(p0)+2, p0*log2(p0)+2(p-p0))")
+
+# --- 2. non-blocking statechart (paper Fig. 4) ------------------------------
+vals = jnp.asarray([3.0, 1.0, 4.0, 1.0, 5.0, 9.0])
+st = nonblocking.init(vals)
+calls = 0
+while True:
+    st = nonblocking.step(st, vals, p=p, op="max")
+    calls += 1
+    # << the application computes here while the reduction is in flight >>
+    if bool(st["flag"]):
+        break
+print(f"staged allreduce: max={float(st['result'][0])} after {calls} "
+      f"non-blocking calls (= cycle length {nonblocking.cycle_length(p)})")
+
+# --- 3. async iterations + exact convergence detection ----------------------
+fp = solvers.poisson_1d(n=96, omega=1.0, shift=0.5, seed=0)
+cfg = async_engine.AsyncConfig(p=4, detection="exact", eps=1e-5, max_ticks=50000)
+res = async_engine.run(fp, cfg)
+print(f"exact detector fired at tick {res.det_tick}: certified residual "
+      f"{res.res_glb:.2e}, TRUE residual {res.true_res:.2e} < eps — "
+      f"the snapshot solution is genuinely terminal")
+assert res.true_res < cfg.eps
+print("quickstart OK")

@@ -1,0 +1,16 @@
+"""Serving example: batched greedy decoding with KV/state caches, on an SSM
+arch (recurrent cache) to show the cache machinery beyond transformers.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    serve_main([
+        "--arch", "falcon-mamba-7b",
+        "--smoke",
+        "--batch", "4",
+        "--prompt-len", "12",
+        "--gen", "24",
+    ])

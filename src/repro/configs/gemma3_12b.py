@@ -1,0 +1,7 @@
+"""--arch gemma3-12b: full config (dry-run) + reduced smoke config."""
+
+from repro.configs.registry import get_config, get_smoke_config
+
+ARCH = "gemma3-12b"
+CONFIG = get_config(ARCH)
+SMOKE = get_smoke_config(ARCH)

@@ -1,0 +1,7 @@
+"""--arch hubert-xlarge: full config (dry-run) + reduced smoke config."""
+
+from repro.configs.registry import get_config, get_smoke_config
+
+ARCH = "hubert-xlarge"
+CONFIG = get_config(ARCH)
+SMOKE = get_smoke_config(ARCH)

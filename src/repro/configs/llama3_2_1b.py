@@ -1,0 +1,7 @@
+"""--arch llama3.2-1b: full config (dry-run) + reduced smoke config."""
+
+from repro.configs.registry import get_config, get_smoke_config
+
+ARCH = "llama3.2-1b"
+CONFIG = get_config(ARCH)
+SMOKE = get_smoke_config(ARCH)

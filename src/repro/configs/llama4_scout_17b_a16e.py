@@ -1,0 +1,7 @@
+"""--arch llama4-scout-17b-a16e: full config (dry-run) + reduced smoke config."""
+
+from repro.configs.registry import get_config, get_smoke_config
+
+ARCH = "llama4-scout-17b-a16e"
+CONFIG = get_config(ARCH)
+SMOKE = get_smoke_config(ARCH)

@@ -1,0 +1,7 @@
+"""--arch minicpm-2b: full config (dry-run) + reduced smoke config."""
+
+from repro.configs.registry import get_config, get_smoke_config
+
+ARCH = "minicpm-2b"
+CONFIG = get_config(ARCH)
+SMOKE = get_smoke_config(ARCH)

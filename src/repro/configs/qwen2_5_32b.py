@@ -1,0 +1,7 @@
+"""--arch qwen2.5-32b: full config (dry-run) + reduced smoke config."""
+
+from repro.configs.registry import get_config, get_smoke_config
+
+ARCH = "qwen2.5-32b"
+CONFIG = get_config(ARCH)
+SMOKE = get_smoke_config(ARCH)

@@ -1,0 +1,49 @@
+"""Assigned input-shape cells (same four for every LM-family arch).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV
+cache of ``seq_len``), not ``train_step``.  Skip rules (DESIGN.md S6):
+``long_500k`` only for sub-quadratic archs; encoder-only archs have no decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# archs whose attention is sub-quadratic in cache size (SSM / hybrid / SWA /
+# mostly-local): eligible for long_500k
+LONG_CONTEXT_OK = {"falcon-mamba-7b", "zamba2-2.7b", "mixtral-8x7b", "gemma3-12b"}
+
+ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def cells_for(arch: str) -> list[str]:
+    out = ["train_4k", "prefill_32k"]
+    if arch not in ENCODER_ONLY:
+        out.append("decode_32k")
+        if arch in LONG_CONTEXT_OK:
+            out.append("long_500k")
+    return out
+
+
+def skip_reason(arch: str, shape: str) -> str | None:
+    if shape in ("decode_32k", "long_500k") and arch in ENCODER_ONLY:
+        return "encoder-only: no decode step"
+    if shape == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return "pure full attention: 500k decode cache infeasible (DESIGN.md S6)"
+    return None

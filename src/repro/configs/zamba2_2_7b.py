@@ -1,0 +1,7 @@
+"""--arch zamba2-2.7b: full config (dry-run) + reduced smoke config."""
+
+from repro.configs.registry import get_config, get_smoke_config
+
+ARCH = "zamba2-2.7b"
+CONFIG = get_config(ARCH)
+SMOKE = get_smoke_config(ARCH)

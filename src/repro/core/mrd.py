@@ -1,0 +1,372 @@
+"""Modified recursive doubling collectives: device and simulation executors.
+
+One schedule (``repro.core.topology``), two executors:
+
+- **device**: runs inside ``jax.shard_map`` using ``jax.lax.ppermute``
+  (collective-permute, the native TPU ICI primitive).  SPMD: every rank runs
+  the same program; shift stages are masked by rank predicates.
+- **sim**: pure ``jnp`` over a stacked leading rank axis ``[p, ...]``.  Runs on
+  a single CPU device, so correctness of the schedule math is exhaustively
+  testable for any ``p`` (including non-powers-of-two, the paper's case)
+  without multi-device hardware.
+
+Both executors share the same stage-interpretation code via a tiny backend
+shim, so the compiled collective is, by construction, the validated math.
+
+Ops follow the paper (S2): summation, maximization, minimization.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core import topology
+from repro.core.topology import (
+    Stage,
+    allgather_schedule,
+    allreduce_schedule,
+    pivot,
+    rabenseifner_schedule,
+    reduce_scatter_schedule,
+)
+
+OPS: dict[str, Callable[[Any, Any], Any]] = {
+    "sum": jnp.add,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+def _resolve_op(op: str | Callable) -> Callable:
+    if callable(op):
+        return op
+    try:
+        return OPS[op]
+    except KeyError:
+        raise ValueError(f"unknown reduction op {op!r}; known: {sorted(OPS)}")
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+class DeviceBackend:
+    """Executes stages with ppermute over a named mesh axis (inside shard_map)."""
+
+    def __init__(self, axis_name: str):
+        self.axis = axis_name
+
+    def rank(self):
+        return jax.lax.axis_index(self.axis)
+
+    def permute(self, x, pairs):
+        if not pairs:
+            return jnp.zeros_like(x)
+        return jax.lax.ppermute(x, self.axis, pairs)
+
+    def where(self, mask, a, b):
+        return jnp.where(mask, a, b)
+
+    # value-dimension helpers (device arrays carry no rank axis)
+    def split_half(self, x):
+        n = x.shape[0]
+        return x[: n // 2], x[n // 2 :]
+
+    def concat(self, a, b):
+        return jnp.concatenate([a, b], axis=0)
+
+
+class SimBackend:
+    """Executes stages on stacked arrays [p, ...] on a single device."""
+
+    def __init__(self, p: int):
+        self.p = p
+
+    def rank(self):
+        return jnp.arange(self.p)
+
+    def permute(self, x, pairs):
+        idx = np.zeros(self.p, dtype=np.int32)
+        has = np.zeros(self.p, dtype=bool)
+        for s, d in pairs:
+            idx[d] = s
+            has[d] = True
+        recv = jnp.take(x, jnp.asarray(idx), axis=0)
+        mask = jnp.asarray(has).reshape((self.p,) + (1,) * (x.ndim - 1))
+        return jnp.where(mask, recv, jnp.zeros_like(recv))
+
+    def where(self, mask, a, b):
+        mask = jnp.asarray(mask)
+        nd = max(getattr(a, "ndim", 0), getattr(b, "ndim", 0))
+        mask = mask.reshape(mask.shape + (1,) * (nd - mask.ndim))
+        return jnp.where(mask, a, b)
+
+    def split_half(self, x):
+        n = x.shape[1]
+        return x[:, : n // 2], x[:, n // 2 :]
+
+    def concat(self, a, b):
+        return jnp.concatenate([a, b], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Stage interpreters (shared by both backends)
+# ---------------------------------------------------------------------------
+
+
+def _exec_allreduce_stage(x, st: Stage, be, p: int, op: Callable):
+    p0, _, extra = pivot(p)
+    r = be.rank()
+    recv = be.permute(x, st.pairs)
+    if st.kind == "bshift":
+        return be.where(r < extra, op(x, recv), x)
+    if st.kind == "butterfly":
+        return be.where(r < p0, op(x, recv), x)
+    if st.kind == "fshift":
+        return be.where(r >= p0, recv, x)
+    raise ValueError(f"bad allreduce stage kind {st.kind}")
+
+
+def _exec_allreduce(x, be, p: int, op: Callable):
+    for st in allreduce_schedule(p):
+        x = _exec_allreduce_stage(x, st, be, p, op)
+    return x
+
+
+def _exec_reduce_scatter(x, be, p: int, op: Callable):
+    """x: full vector (len divisible by p0). Returns rank's segment (len/p0),
+    natural order; junk on extra ranks (>= p0)."""
+    p0, _, extra = pivot(p)
+    r = be.rank()
+    for st in reduce_scatter_schedule(p):
+        if st.kind == "bshift":
+            recv = be.permute(x, st.pairs)
+            x = be.where(r < extra, op(x, recv), x)
+        else:  # 'rs'
+            d = st.distance
+            lower, upper = be.split_half(x)
+            my_bit = (r & d) != 0
+            to_send = be.where(my_bit, lower, upper)
+            recv = be.permute(to_send, st.pairs)
+            keep = be.where(my_bit, upper, lower)
+            x = be.where(r < p0, op(keep, recv), keep)
+    return x
+
+
+def _exec_allgather(x, be, p: int):
+    """x: rank's segment (ranks >= p0 carry junk). Returns the full vector on
+    every rank."""
+    p0, _, _ = pivot(p)
+    r = be.rank()
+    for st in allgather_schedule(p):
+        recv = be.permute(x, st.pairs)
+        if st.kind == "ag":
+            my_bit = (r & st.distance) != 0
+            x = be.where(my_bit, be.concat(recv, x), be.concat(x, recv))
+        else:  # fshift
+            x = be.where(r >= p0, recv, x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Device API (call inside shard_map over `axis_name`)
+# ---------------------------------------------------------------------------
+
+
+def axis_size(axis_name: str) -> int:
+    return jax.lax.axis_size(axis_name)
+
+
+def allreduce(tree, axis_name: str, *, op: str | Callable = "sum"):
+    """Paper-faithful MRD allreduce of a pytree over ``axis_name``.
+
+    Latency-optimal: log2(p0)+2 stages, full payload each stage.
+    """
+    p = axis_size(axis_name)
+    if p == 1:
+        return tree
+    be = DeviceBackend(axis_name)
+    fn = functools.partial(_exec_allreduce, be=be, p=p, op=_resolve_op(op))
+    return jax.tree.map(fn, tree)
+
+
+def reduce_scatter(vec, axis_name: str, *, op: str | Callable = "sum"):
+    """Recursive-halving reduce-scatter of a 1-D vector. ``len(vec)`` must be
+    divisible by p0; ranks >= p0 return junk (mask or ignore)."""
+    p = axis_size(axis_name)
+    if p == 1:
+        return vec
+    p0, _, _ = pivot(p)
+    if vec.ndim != 1 or vec.shape[0] % p0:
+        raise ValueError(f"need 1-D vec with len % {p0} == 0, got {vec.shape}")
+    return _exec_reduce_scatter(vec, DeviceBackend(axis_name), p, _resolve_op(op))
+
+
+def compressed_reduce_scatter(vec, axis_name: str, *, block: int = 256):
+    """Reduce-scatter with int8-quantized wire payloads (beyond-paper).
+
+    Each recursive-halving stage quantizes the outgoing half blockwise and
+    dequant-accumulates on receive (the ``mrd_combine`` kernel's op).  Wire
+    bytes drop ~4x vs fp32.  Quantization noise is bounded per stage
+    (|err| <= amax/254 per block); the grad-sync layer adds error feedback.
+    """
+    from repro.collectives import compression as C
+
+    p = axis_size(axis_name)
+    if p == 1:
+        return vec
+    p0, _, extra = pivot(p)
+    if vec.ndim != 1 or vec.shape[0] % (p0 * block):
+        raise ValueError(f"need len % {p0 * block} == 0, got {vec.shape}")
+    be = DeviceBackend(axis_name)
+    r = be.rank()
+    x = vec
+    for st in reduce_scatter_schedule(p):
+        if st.kind == "bshift":
+            q, s = C.quantize(x, block)
+            qr = be.permute(q, st.pairs)
+            sr = be.permute(s, st.pairs)
+            x = be.where(r < extra, x + C.dequantize(qr, sr, block), x)
+        else:
+            d = st.distance
+            lower, upper = be.split_half(x)
+            my_bit = (r & d) != 0
+            to_send = be.where(my_bit, lower, upper)
+            q, s = C.quantize(to_send, block)
+            qr = be.permute(q, st.pairs)
+            sr = be.permute(s, st.pairs)
+            keep = be.where(my_bit, upper, lower)
+            x = be.where(r < p0, keep + C.dequantize(qr, sr, block), keep)
+    return x
+
+
+def allgather(seg, axis_name: str):
+    """Recursive-doubling all-gather of each pivot rank's 1-D segment."""
+    p = axis_size(axis_name)
+    if p == 1:
+        return seg
+    return _exec_allgather(seg, DeviceBackend(axis_name), p)
+
+
+def rabenseifner_allreduce(vec, axis_name: str, *, op: str | Callable = "sum"):
+    """Bandwidth-optimal allreduce (beyond-paper; paper ref. [20]):
+    reduce-scatter + all-gather, ~2n per rank instead of n*log2(p0)."""
+    return allgather(reduce_scatter(vec, axis_name, op=op), axis_name)
+
+
+def hierarchical_allreduce(
+    vec, inner_axis: str, outer_axis: str, *, op: str | Callable = "sum"
+):
+    """Pod-aware allreduce (beyond-paper): reduce-scatter within ``inner_axis``
+    (intra-pod ICI), MRD allreduce across ``outer_axis`` (inter-pod DCN) on the
+    1/p0_inner-size shard, then all-gather within ``inner_axis``.
+
+    Inter-pod traffic drops from n*log2(pods) to (n/p0_inner)*log2(pods)."""
+    seg = reduce_scatter(vec, inner_axis, op=op)
+    seg = allreduce(seg, outer_axis, op=op)
+    return allgather(seg, inner_axis)
+
+
+def tree_allreduce_flat(
+    tree,
+    axis_name: str,
+    *,
+    op: str | Callable = "sum",
+    schedule: str = "rabenseifner",
+):
+    """Allreduce a pytree as one flat padded vector (flat-bucket).
+
+    ``schedule``: 'mrd' (paper), 'rabenseifner' (beyond-paper, default for
+    bandwidth-bound payloads like gradients).
+    """
+    p = axis_size(axis_name)
+    if p == 1:
+        return tree
+    vec, unravel = ravel_pytree(tree)
+    p0, _, _ = pivot(p)
+    pad = (-vec.shape[0]) % p0
+    padded = jnp.pad(vec, (0, pad))
+    if schedule == "mrd":
+        out = _exec_allreduce(padded, DeviceBackend(axis_name), p, _resolve_op(op))
+    elif schedule == "rabenseifner":
+        out = rabenseifner_allreduce(padded, axis_name, op=op)
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+    return unravel(out[: vec.shape[0]])
+
+
+# ---------------------------------------------------------------------------
+# Simulation API (single device, stacked rank axis)
+# ---------------------------------------------------------------------------
+
+
+def sim_allreduce(x, *, op: str | Callable = "sum"):
+    """x: [p, ...] stacked per-rank values -> [p, ...] (all rows = reduction)."""
+    p = x.shape[0]
+    if p == 1:
+        return x
+    return _exec_allreduce(x, SimBackend(p), p, _resolve_op(op))
+
+
+def sim_reduce_scatter(x, *, op: str | Callable = "sum"):
+    """x: [p, n] with n % p0 == 0 -> [p, n/p0] (rows >= p0 are junk)."""
+    p = x.shape[0]
+    if p == 1:
+        return x
+    p0, _, _ = pivot(p)
+    if x.shape[1] % p0:
+        raise ValueError(f"n={x.shape[1]} not divisible by p0={p0}")
+    return _exec_reduce_scatter(x, SimBackend(p), p, _resolve_op(op))
+
+
+def sim_allgather(x):
+    """x: [p, m] segments (rows >= p0 junk) -> [p, m*p0]."""
+    p = x.shape[0]
+    if p == 1:
+        return x
+    return _exec_allgather(x, SimBackend(p), p)
+
+
+def sim_rabenseifner_allreduce(x, *, op: str | Callable = "sum"):
+    return sim_allgather(sim_reduce_scatter(x, op=op))
+
+
+# ---------------------------------------------------------------------------
+# Whole-array convenience wrappers (build the shard_map for the caller)
+# ---------------------------------------------------------------------------
+
+
+def make_allreduce(mesh, axis_name: str, *, op: str = "sum", schedule: str = "mrd"):
+    """Returns a jitted fn: [p, ...] global array sharded over ``axis_name`` ->
+    allreduced array of the same shape (each shard = full reduction)."""
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(axis_name)
+
+    def fn(x):
+        def local(v):
+            y = v[0]
+            if schedule == "mrd":
+                out = allreduce(y, axis_name, op=op)
+            elif schedule == "rabenseifner":
+                flat = y.reshape(-1)
+                p0, _, _ = pivot(mesh.shape[axis_name])
+                pad = (-flat.shape[0]) % p0
+                out = rabenseifner_allreduce(jnp.pad(flat, (0, pad)), axis_name, op=op)
+                out = out[: flat.shape[0]].reshape(y.shape)
+            elif schedule == "psum":
+                out = jax.lax.psum(y, axis_name)
+            else:
+                raise ValueError(schedule)
+            return out[None]
+
+        return jax.shard_map(local, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+
+    return jax.jit(fn)

@@ -1,0 +1,134 @@
+"""Pallas TPU flash-attention (forward): online softmax over KV blocks.
+
+Grid: (B*KV, rep, Sq/bq) — one program per (batch x kv-head, q-head-in-group,
+q block).  The KV axis is walked *inside* the kernel body with
+``jax.lax.fori_loop`` over VMEM-resident blocks delivered by the BlockSpec
+index_map, so the running (m, l, acc) state stays in registers/VMEM.
+
+Block shapes are MXU-aligned: bq x bk scores with hd in {64, 80, 128, 256};
+bq = bk = 128 default (8x128 lanes x 16 MXU passes).  Causal + sliding-window
+masks are positional, matching ``ref.py`` / ``models.attention`` semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref,  # [bq, hd]
+    k_ref,  # [Skv, hd]  (full kv stripe for this (b, kv-head))
+    v_ref,  # [Skv, hd]
+    o_ref,  # [bq, hd]
+    *,
+    bk: int,
+    causal: bool,
+    window,
+    q_offset: int,
+    skv: int,
+):
+    bq, hd = q_ref.shape
+    qi = pl.program_id(2)
+    q_pos = q_offset + qi * bq + jax.lax.iota(jnp.int32, bq)
+
+    q = q_ref[...].astype(jnp.float32) * (hd**-0.5)
+
+    nblocks = pl.cdiv(skv, bk)
+
+    def body(ki, carry):
+        m_run, l_run, acc = carry
+        k_blk = k_ref[pl.ds(ki * bk, bk), :].astype(jnp.float32)
+        v_blk = v_ref[pl.ds(ki * bk, bk), :].astype(jnp.float32)
+        k_pos = ki * bk + jax.lax.iota(jnp.int32, bk)
+        s = jax.lax.dot_general(
+            q, k_blk, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [bq, bk]
+        mask = k_pos[None, :] < skv
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_run * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, hd), jnp.float32)
+    # causal: blocks strictly above the diagonal contribute nothing — skip.
+    if causal:
+        last = ((q_offset + (qi + 1) * bq - 1) // bk) + 1
+        nblk = jnp.minimum(nblocks, last)
+    else:
+        nblk = nblocks
+    m_f, l_f, acc = jax.lax.fori_loop(0, nblk, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l_f, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+):
+    """q: [B,Sq,H,hd]; k,v: [B,Skv,KV,hd] -> [B,Sq,H,hd]."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+
+    # pad Sq to bq multiple; kv stripe padded to bk multiple
+    sq_pad = (-Sq) % bq
+    skv_pad = (-Skv) % bk
+    if sq_pad:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0), (0, 0)))
+    if skv_pad:
+        k = jnp.pad(k, ((0, 0), (0, skv_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, skv_pad), (0, 0), (0, 0)))
+    Sq_p, Skv_p = Sq + sq_pad, Skv + skv_pad
+
+    # layout: [B*KV, rep, Sq_p, hd] for q; [B*KV, Skv_p, hd] for kv
+    qx = q.reshape(B, Sq_p, KV, rep, hd).transpose(0, 2, 3, 1, 4).reshape(
+        B * KV, rep, Sq_p, hd
+    )
+    kx = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv_p, hd)
+    vx = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv_p, hd)
+
+    grid = (B * KV, rep, Sq_p // bq)
+    kernel = functools.partial(
+        _fa_kernel, bk=bk, causal=causal, window=window, q_offset=q_offset, skv=Skv
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, bq, hd), lambda b, r, i: (b, r, i, 0)),
+            pl.BlockSpec((None, Skv_p, hd), lambda b, r, i: (b, 0, 0)),
+            pl.BlockSpec((None, Skv_p, hd), lambda b, r, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, bq, hd), lambda b, r, i: (b, r, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, rep, Sq_p, hd), q.dtype),
+        interpret=interpret,
+    )(qx, kx, vx)
+
+    out = out.reshape(B, KV, rep, Sq_p, hd).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, Sq_p, H, hd)[:, :Sq]

@@ -1,0 +1,30 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+On TPU: the Pallas kernel.  On CPU (this container): interpret mode executes
+the kernel body in Python — used by the allclose test sweeps; production CPU
+paths use ``models.attention`` flash_scan instead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q, k, v, *, causal=True, window=None, q_offset=0, bq=128, bk=128, interpret=None
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_fwd(
+        q, k, v,
+        causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, interpret=interpret,
+    )

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
+    """q: [B,Sq,H,hd]; k,v: [B,Skv,KV,hd] -> [B,Sq,H,hd].  fp32 softmax."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    qg = (q.astype(jnp.float32) * hd**-0.5).reshape(B, Sq, KV, rep, hd)
+    s = jnp.einsum("bqgrh,bkgh->bgrqk", qg, k.astype(jnp.float32))
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    m = jnp.ones((Sq, Skv), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bkgh->bqgrh", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)

@@ -1,0 +1,48 @@
+"""Pallas TPU fused dequant-accumulate for compressed MRD reduce-scatter.
+
+The receive path of the compressed butterfly does, per stage:
+``keep += dequantize(recv_q, recv_scales)``.  Unfused this is int8->f32 cast,
+reshape-scale, add — three HBM round-trips over the gradient shard.  The
+kernel streams (x, q, scales) blocks through VMEM once.
+
+Grid: (n / bn,), bn a multiple of the 256-element quantization block so the
+scale vector tiles align (bn/256 scales per program).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QBLOCK = 256
+
+
+def _combine_kernel(x_ref, q_ref, s_ref, o_ref):
+    # x_ref/q_ref: [bn]; s_ref: [bn/256]; o_ref: [bn]
+    bn = x_ref.shape[0]
+    q = q_ref[...].astype(jnp.float32).reshape(bn // QBLOCK, QBLOCK)
+    deq = q * s_ref[...][:, None]
+    o_ref[...] = (x_ref[...].astype(jnp.float32) + deq.reshape(bn)).astype(o_ref.dtype)
+
+
+def mrd_combine_fwd(x, q, scales, *, bn: int = 32768, interpret: bool = False):
+    """x: [n]; q: [n] int8; scales: [n/256] f32 -> x + dequant(q)."""
+    n = x.shape[0]
+    assert n % QBLOCK == 0, n
+    bn = min(bn, n)
+    assert bn % QBLOCK == 0 and n % bn == 0, (n, bn)
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn // QBLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=interpret,
+    )(x, q, scales)

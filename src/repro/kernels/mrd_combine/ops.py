@@ -1,0 +1,16 @@
+"""jit'd wrapper for mrd_combine (TPU: compiled; CPU: interpret)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.mrd_combine.kernel import mrd_combine_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def mrd_combine(x, q, scales, *, bn=32768, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return mrd_combine_fwd(x, q, scales, bn=bn, interpret=interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the mrd_combine kernel (fused dequant-accumulate)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mrd_combine_ref(x, q, scales, block: int = 256):
+    """x: [n] float; q: [n] int8; scales: [n/block] f32.
+    Returns x + dequant(q, scales) in x.dtype (f32 accumulate)."""
+    n = x.shape[0]
+    deq = (q.astype(jnp.float32).reshape(n // block, block) * scales[:, None]).reshape(n)
+    return (x.astype(jnp.float32) + deq).astype(x.dtype)

@@ -1,0 +1,42 @@
+"""Pallas TPU fused RMSNorm (forward): one HBM read, one write per row block.
+
+Grid: (T / bt,); block [bt, d] resident in VMEM with the row statistics
+computed in fp32 on the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rms_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * (1.0 + w_ref[...].astype(jnp.float32))).astype(
+        o_ref.dtype
+    )
+
+
+def rmsnorm_fwd(x, w, *, eps: float = 1e-5, bt: int = 256, interpret: bool = False):
+    """x: [T, d]; w: [d]."""
+    T, d = x.shape
+    bt = min(bt, T)
+    pad = (-T) % bt
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rms_kernel, eps=eps),
+        grid=((T + pad) // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T + pad, d), x.dtype),
+        interpret=interpret,
+    )(x, w)
+    return out[:T]

@@ -1,0 +1,16 @@
+"""jit'd wrapper for the fused rmsnorm kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "bt", "interpret"))
+def rmsnorm(x, w, *, eps=1e-5, bt=256, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return rmsnorm_fwd(x, w, eps=eps, bt=bt, interpret=interpret)

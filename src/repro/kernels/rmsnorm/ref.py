@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused rmsnorm kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-5):
+    """x: [T, d]; w: [d] (stored as 1+w convention)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))).astype(
+        x.dtype
+    )

@@ -1,0 +1,72 @@
+"""Pallas TPU selective scan (mamba1): chunked recurrence with the carry
+state held in VMEM scratch across sequential grid steps.
+
+Grid: (B, D/bd, S/chunk) with dimension_semantics ("parallel", "parallel",
+"arbitrary") — the S axis is the minor-most grid dim, iterated sequentially
+per (batch, channel-block), so ``h_scratch`` carries h across chunks: the
+HBM->VMEM stream is one chunk of (decay, Bx, C) at a time (the TPU analogue
+of the CUDA kernel's register-resident scan; see DESIGN.md S7).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(decay_ref, bx_ref, c_ref, y_ref, h_scratch, *, chunk: int):
+    # decay_ref/bx_ref: [chunk, bd, N]; c_ref: [chunk, N]; y_ref: [chunk, bd]
+    i_s = pl.program_id(2)
+
+    @pl.when(i_s == 0)
+    def _init():
+        h_scratch[...] = jnp.zeros_like(h_scratch)
+
+    def body(t, h):
+        h = decay_ref[t].astype(jnp.float32) * h + bx_ref[t].astype(jnp.float32)
+        y_ref[t, :] = jnp.sum(h * c_ref[t].astype(jnp.float32)[None, :], axis=-1).astype(
+            y_ref.dtype
+        )
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, body, h_scratch[...])
+    h_scratch[...] = h
+
+
+def selective_scan_fwd(
+    decay, bx, cs, *, bd: int = 512, chunk: int = 64, interpret: bool = False
+):
+    """decay, bx: [B,S,D,N]; cs: [B,S,N] -> y [B,S,D] fp32."""
+    B, S, D, N = decay.shape
+    bd = min(bd, D)
+    chunk = min(chunk, S)
+    assert D % bd == 0, (D, bd)
+    s_pad = (-S) % chunk
+    if s_pad:
+        decay = jnp.pad(decay, ((0, 0), (0, s_pad), (0, 0), (0, 0)), constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, s_pad), (0, 0), (0, 0)))
+        cs = jnp.pad(cs, ((0, 0), (0, s_pad), (0, 0)))
+    S_p = S + s_pad
+
+    grid = (B, D // bd, S_p // chunk)
+    out = pl.pallas_call(
+        functools.partial(_scan_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, bd, N), lambda b, d, s: (b, s, d, 0)),
+            pl.BlockSpec((None, chunk, bd, N), lambda b, d, s: (b, s, d, 0)),
+            pl.BlockSpec((None, chunk, N), lambda b, d, s: (b, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, bd), lambda b, d, s: (b, s, d)),
+        out_shape=jax.ShapeDtypeStruct((B, S_p, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(decay, bx, cs)
+    return out[:, :S]

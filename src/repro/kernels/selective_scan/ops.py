@@ -1,0 +1,16 @@
+"""jit'd wrapper for the selective-scan kernel (TPU: compiled; CPU: interpret)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.selective_scan.kernel import selective_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "chunk", "interpret"))
+def selective_scan(decay, bx, cs, *, bd=512, chunk=64, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return selective_scan_fwd(decay, bx, cs, bd=bd, chunk=chunk, interpret=interpret)

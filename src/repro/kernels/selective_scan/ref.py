@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the selective-scan kernel (mamba1 recurrence)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(decay, bx, cs, h0=None):
+    """h_t = decay_t * h_{t-1} + bx_t ;  y_t = sum_s h_t[., s] * cs_t[s].
+
+    decay, bx: [B, S, D, N]; cs: [B, S, N]; h0: [B, D, N] (zeros default).
+    Returns (y [B, S, D] fp32, h_final [B, D, N])."""
+    B, S, D, N = decay.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), jnp.float32)
+
+    def step(h, inp):
+        d_t, b_t, c_t = inp
+        h = d_t * h + b_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (
+        decay.astype(jnp.float32).transpose(1, 0, 2, 3),
+        bx.astype(jnp.float32).transpose(1, 0, 2, 3),
+        cs.astype(jnp.float32).transpose(1, 0, 2),
+    )
+    h_f, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h_f

@@ -1,0 +1,371 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# Only the dry-run sees 512 placeholder devices; tests/benches see 1.
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch x shape x mesh) cell
+on the production meshes, record memory/cost analysis + collective bytes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry, shapes
+from repro.distributed import sharding as shd
+from repro.distributed import step as step_lib
+from repro.launch import roofline
+from repro.launch.mesh import make_mesh_by_name
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import dtype_of
+from repro.optim.optimizer import OptimizerConfig
+
+# per-arch PER-DEVICE microbatch size (sequences) for train_4k: keeps saved
+# residual-stream activations (L x B_mb_loc x S x d, bf16) <= ~4 GB/device.
+# The microbatch COUNT is mesh-derived: mb = B / (dp * B_mb_loc), so the
+# local working set is identical on single- and multi-pod meshes.
+LOCAL_MICROBATCH_SEQS = {
+    "mixtral-8x7b": 2,
+    "llama4-scout-17b-a16e": 1,
+    "llama3.2-1b": 8,
+    "minicpm-2b": 2,
+    "gemma3-12b": 2,
+    "qwen2.5-32b": 1,
+    "falcon-mamba-7b": 2,
+    "zamba2-2.7b": 2,
+    "internvl2-1b": 4,
+    "hubert-xlarge": 8,
+}
+
+
+def microbatches_for(arch: str, global_batch: int, mesh) -> int:
+    dp = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            dp *= mesh.shape[a]
+    loc = LOCAL_MICROBATCH_SEQS.get(arch, 2)
+    target = max(1, global_batch // (dp * loc))
+    # snap to a divisor of the global batch; prefer per-microbatch batches
+    # that stay DP-divisible (non-power-of-two DP groups fall back to the
+    # largest plain divisor <= target)
+    divisors = [m for m in range(1, global_batch + 1) if global_batch % m == 0]
+    good = [m for m in divisors if m <= target and (global_batch // m) % dp == 0]
+    if good:
+        return max(good)
+    ok = [m for m in divisors if m <= target]
+    return max(ok) if ok else 1
+
+
+def input_specs(cfg: ModelConfig, cell: shapes.ShapeCell):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    cdt = dtype_of(cfg.compute_dtype)
+    sds = jax.ShapeDtypeStruct
+    if cell.kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            batch = {
+                "frames": sds((B, S, 80), cdt),
+                "labels": sds((B, S), i32),
+            }
+        elif cfg.frontend == "vision":
+            s_text = S - cfg.n_frontend_tokens
+            batch = {
+                "tokens": sds((B, s_text), i32),
+                "labels": sds((B, s_text), i32),
+                "patches": sds((B, cfg.n_frontend_tokens, 1024), cdt),
+            }
+        else:
+            batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if cell.kind == "prefill":
+            batch.pop("labels")
+        return batch
+    # decode: one new token against a cache of length S
+    cache = jax.eval_shape(lambda: transformer.init_cache(cfg, B, S))
+    return {
+        "tokens": sds((B,), i32),
+        "cache": cache,
+        "cache_len": sds((), i32),
+    }
+
+
+_F32CONV_RE = None
+
+
+def estimate_bf16_upcast_bytes(hlo_text: str, param_shapes: set) -> int:
+    """XLA *CPU* upcasts bf16 dot operands to f32, materializing f32 copies of
+    whole stacked weight arrays (L-proportional temp).  TPU MXUs consume bf16
+    natively, so these buffers don't exist on the target.  Sum the f32
+    ``convert`` results whose dims exactly match a parameter shape — reported
+    as ``bf16_upcast_weight_bytes`` and subtracted in
+    ``temp_bytes_tpu_adjusted`` (see EXPERIMENTS.md methodology)."""
+    import re as _re
+
+    total = 0
+    for m in _re.finditer(r"f32\[([\d,]+)\][^=]*? convert\(", hlo_text):
+        dims = tuple(int(x) for x in m.group(1).split(","))
+        if dims in param_shapes:
+            n = 1
+            for d_ in dims:
+                n *= d_
+            total += n * 4
+    return total
+
+
+def _cost(compiled):
+    try:
+        c = compiled.cost_analysis()
+        if isinstance(c, (list, tuple)):
+            c = c[0]
+        return dict(c) if c else {}
+    except Exception:
+        return {}
+
+
+def _memory(compiled):
+    try:
+        m = compiled.memory_analysis()
+        if m is None:
+            return {}
+        return {
+            "argument_bytes": getattr(m, "argument_size_in_bytes", None),
+            "output_bytes": getattr(m, "output_size_in_bytes", None),
+            "temp_bytes": getattr(m, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(m, "generated_code_size_in_bytes", None),
+            "alias_bytes": getattr(m, "alias_size_in_bytes", None),
+        }
+    except Exception:
+        return {}
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_name: str,
+    *,
+    grad_sync: str = "gspmd",
+    microbatches: int | None = None,
+    remat: str = "full",
+    overrides: dict | None = None,
+    verbose: bool = True,
+) -> dict:
+    import dataclasses as _dc
+
+    cfg = registry.get_config(arch)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    cell = shapes.SHAPES[shape_name]
+    skip = shapes.skip_reason(arch, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name, "skipped": skip}
+
+    mesh = make_mesh_by_name(mesh_name)
+    # elastic/non-p2 meshes: round the global batch down to a DP multiple —
+    # exactly what an elastic controller does after a shrink (the alternative
+    # is replicating the whole batch on every device).
+    import dataclasses as _dc2
+
+    dp = 1
+    for a in mesh.axis_names:
+        if a != "model":
+            dp *= mesh.shape[a]
+    if cell.global_batch % dp:
+        cell = _dc2.replace(cell, global_batch=(cell.global_batch // dp) * dp)
+    t0 = time.time()
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "grad_sync": grad_sync,
+        "chips": int(np.prod(list(mesh.shape.values()))),
+        "global_batch": cell.global_batch,
+    }
+
+    with mesh:
+        if cell.kind == "train":
+            mb = microbatches or microbatches_for(arch, cell.global_batch, mesh)
+            tcfg = step_lib.TrainConfig(
+                microbatches=mb,
+                remat=remat,
+                grad_sync=grad_sync,
+                monitor=True,
+                optimizer=OptimizerConfig(),
+            )
+            result["microbatches"] = mb
+            result["remat"] = remat
+            train_step, init_state, state_specs, rules = step_lib.make_train_step(
+                cfg, mesh, tcfg
+            )
+            state_sds = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+            specs = state_specs(state_sds)
+            st_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+            batch_sds = input_specs(cfg, cell)
+            b_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                step_lib.batch_specs(cfg, rules, batch_sds),
+            )
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(st_sh, b_sh),
+                out_shardings=(st_sh, None),
+                donate_argnums=(0,),
+            ).lower(state_sds, batch_sds)
+        elif cell.kind == "prefill":
+            prefill_step, rules = step_lib.make_prefill_step(cfg, mesh)
+            params_sds = jax.eval_shape(
+                lambda: transformer.init_params(cfg, jax.random.PRNGKey(0))
+            )
+            p_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                shd.param_specs(cfg, rules, params_sds),
+            )
+            batch_sds = input_specs(cfg, cell)
+            b_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                step_lib.batch_specs(cfg, rules, batch_sds),
+            )
+            lowered = jax.jit(
+                prefill_step, in_shardings=(p_sh, b_sh)
+            ).lower(params_sds, batch_sds)
+        else:  # decode
+            serve_step, rules = step_lib.make_serve_step(cfg, mesh)
+            params_sds = jax.eval_shape(
+                lambda: transformer.init_params(cfg, jax.random.PRNGKey(0))
+            )
+            p_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                shd.param_specs(cfg, rules, params_sds),
+            )
+            ins = input_specs(cfg, cell)
+            c_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                step_lib.cache_specs(cfg, rules, ins["cache"]),
+            )
+            tok_spec = NamedSharding(
+                mesh, P(rules.batch_axes(cell.global_batch))
+            )
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(p_sh, tok_spec, c_sh, NamedSharding(mesh, P())),
+                out_shardings=(None, c_sh),
+                donate_argnums=(2,),
+            ).lower(params_sds, ins["tokens"], ins["cache"], ins["cache_len"])
+
+    result["lower_seconds"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    result["compile_seconds"] = round(time.time() - t1, 2)
+
+    cost = _cost(compiled)
+    result["cost"] = {
+        "flops": cost.get("flops"),
+        "bytes_accessed": cost.get("bytes accessed"),
+    }
+    result["memory"] = _memory(compiled)
+    hlo = compiled.as_text()
+    result["collective_bytes"] = roofline.parse_collective_bytes(hlo)
+    # per-device (sharded) param shapes for the CPU-upcast adjustment
+    pshapes = set()
+    try:
+        if cell.kind == "train":
+            srcs = [(state_sds["params"], st_sh["params"])]
+        elif cell.kind == "decode":
+            srcs = [(params_sds, p_sh), (ins["cache"], c_sh)]
+        else:
+            srcs = [(params_sds, p_sh)]
+        for src, shardings in srcs:
+            for leaf, sh in zip(jax.tree.leaves(src), jax.tree.leaves(shardings)):
+                pshapes.add(tuple(sh.shard_shape(leaf.shape)))
+    except Exception:
+        pass
+    upcast = estimate_bf16_upcast_bytes(hlo, pshapes)
+    result["bf16_upcast_weight_bytes"] = upcast
+    tb = result["memory"].get("temp_bytes")
+    if tb is not None:
+        result["memory"]["temp_bytes_tpu_adjusted"] = tb - upcast
+    result["hlo_collective_counts"] = {
+        k: hlo.count(f" {k}(") + hlo.count(f" {k}-start(")
+        for k in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+    }
+    result["model_flops"] = roofline.model_flops_for(cfg, cell)
+    if verbose:
+        print(json.dumps({k: v for k, v in result.items() if k != "cost"}, indent=1))
+        print("memory_analysis:", result["memory"])
+        print("cost_analysis flops:", result["cost"])
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "nonp2"])
+    ap.add_argument("--grad-sync", default="gspmd")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a in registry.list_archs():
+            print(a, "->", shapes.cells_for(a))
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = []
+    if args.all:
+        for a in registry.list_archs():
+            for s in shapes.cells_for(a):
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in cells:
+        tag = f"{arch}__{shape_name}__{args.mesh}"
+        if args.grad_sync != "gspmd":
+            tag += f"__{args.grad_sync}"
+        out_path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(out_path):
+            print(f"[skip] {tag} (exists)")
+            continue
+        print(f"[run ] {tag}")
+        try:
+            res = run_cell(
+                arch, shape_name, args.mesh,
+                grad_sync=args.grad_sync,
+                microbatches=args.microbatches,
+                remat=args.remat,
+            )
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(tag)
+            res = {"arch": arch, "shape": shape_name, "mesh": args.mesh,
+                   "error": f"{type(e).__name__}: {e}"}
+        with open(out_path, "w") as f:
+            json.dump(res, f, indent=1)
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb harness: run one (arch x shape x mesh) *point* — a named
+combination of knobs — and record its calibrated roofline terms + production
+memory, for hypothesis → change → measure → validate cycles.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.perf --arch llama3.2-1b --shape train_4k \\
+      --mesh single --label baseline
+  PYTHONPATH=src python -m repro.launch.perf ... --label rab --grad-sync mrd_zero1
+  PYTHONPATH=src python -m repro.launch.perf ... --label chunk512 --set attn_chunk=512
+
+Results land in results/perf/<arch>__<shape>__<mesh>__<label>.json with the
+three roofline terms precomputed for direct comparison.
+"""
+
+import argparse
+import json
+
+from repro.configs import registry, shapes
+from repro.launch import roofline as R
+
+
+def run_point(
+    arch: str,
+    shape_name: str,
+    mesh_name: str,
+    label: str,
+    *,
+    grad_sync: str = "gspmd",
+    microbatches: int | None = None,
+    remat: str = "full",
+    overrides: dict | None = None,
+    skip_memory: bool = False,
+) -> dict:
+    from repro.launch import calibrate as C
+    from repro.launch import dryrun as D
+
+    cal = C.calibrate_cell(
+        arch, shape_name, mesh_name,
+        grad_sync=grad_sync, microbatches=microbatches, remat=remat,
+        overrides=overrides,
+    )
+    mem = {}
+    if not skip_memory:
+        prod = D.run_cell(
+            arch, shape_name, mesh_name,
+            grad_sync=grad_sync, microbatches=microbatches, remat=remat,
+            overrides=overrides, verbose=False,
+        )
+        mem = prod.get("memory", {})
+
+    cfg = registry.get_config(arch)
+    cell = shapes.SHAPES[shape_name]
+    chips = 512 if mesh_name == "multi" else (96 if mesh_name == "nonp2" else 256)
+    cc = cal["calibrated"]
+    rep = R.RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=cc["flops"], hlo_bytes=cc["bytes"],
+        collective_bytes={k: int(v) for k, v in cc["coll"].items()},
+        model_flops=R.model_flops_for(cfg, cell),
+        peak_memory_bytes=(
+            (mem.get("temp_bytes_tpu_adjusted") or 0) + (mem.get("argument_bytes") or 0)
+        ) if mem else None,
+    )
+    out = {
+        "label": label,
+        "knobs": {
+            "grad_sync": grad_sync, "microbatches": microbatches,
+            "remat": remat, "overrides": overrides or {},
+        },
+        "roofline": rep.to_dict(),
+        "memory": mem,
+    }
+    print(
+        f"[{label}] t_comp={rep.t_compute*1e3:.2f}ms t_mem={rep.t_memory*1e3:.2f}ms "
+        f"t_coll={rep.t_collective*1e3:.2f}ms bound={rep.bottleneck} "
+        f"useful={rep.useful_flops_ratio*100:.1f}% roofline={rep.roofline_fraction*100:.1f}%"
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--label", required=True)
+    ap.add_argument("--grad-sync", default="gspmd")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override field=value (int/float/str)")
+    ap.add_argument("--skip-memory", action="store_true")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    os.makedirs(args.out, exist_ok=True)
+    res = run_point(
+        args.arch, args.shape, args.mesh, args.label,
+        grad_sync=args.grad_sync, microbatches=args.microbatches,
+        remat=args.remat, overrides=overrides or None,
+        skip_memory=args.skip_memory,
+    )
+    path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{args.mesh}__{args.label}.json"
+    )
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    print("saved", path)
+
+
+if __name__ == "__main__":
+    main()

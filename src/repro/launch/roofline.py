@@ -1,0 +1,168 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs / (chips * 197e12)          [bf16 MXU peak, v5e]
+  memory     = HLO_bytes / (chips * 819e9)           [HBM bandwidth]
+  collective = collective_bytes_per_chip / 50e9       [ICI per-link]
+
+Sources: ``compiled.cost_analysis()`` for FLOPs/bytes (already per-program =
+per-device under SPMD); collective bytes parsed from the compiled HLO text
+(sum of result-shape bytes of all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute ops — a per-device proxy, exact for
+collective-permute, upper bound ~2x for ring-phased ops; consistent across
+configs so deltas are meaningful).
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per training step
+(x1/3 for forward-only serving steps);  MODEL/HLO flops ratio flags remat or
+redundant compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+# --- hardware constants (TPU v5e) ---
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_TUPLE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes per collective category from HLO text."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        if m.group(1):  # simple result shape
+            b = _shape_bytes(m.group(1), m.group(2))
+        else:  # tuple result: sum elements before the op name
+            prefix = line.split(kind)[0]
+            b = sum(_shape_bytes(d, s) for d, s in _TUPLE_ELEM_RE.findall(prefix))
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float  # per device
+    hlo_bytes: float  # per device
+    collective_bytes: dict[str, int]  # per device
+    model_flops: float  # global, per step
+    peak_memory_bytes: Optional[int] = None
+    compile_seconds: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return sum(self.collective_bytes.values()) / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO flops): catches remat/redundancy waste."""
+        total_hlo = self.hlo_flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute time / bound time: how close the step is to the
+        best achievable given its dominant bound."""
+        t_model = self.model_flops / self.chips / PEAK_FLOPS
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_model / t_bound if t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            **dataclasses.asdict(self),
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape_cell, n_layers_tokens=None) -> float:
+    """6*N*D training / 2*N*D forward-only, N = active params."""
+    n_active = cfg.n_active_params()
+    if shape_cell.kind == "train":
+        tokens = shape_cell.global_batch * shape_cell.seq_len
+        return 6.0 * n_active * tokens
+    if shape_cell.kind == "prefill":
+        tokens = shape_cell.global_batch * shape_cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape_cell.global_batch
+
+
+def format_table(reports: list[RooflineReport]) -> str:
+    hdr = (
+        f"{'arch':<24}{'shape':<13}{'mesh':<8}{'t_comp(ms)':>11}{'t_mem(ms)':>11}"
+        f"{'t_coll(ms)':>11}{'bound':>11}{'useful%':>9}{'roofline%':>10}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in reports:
+        lines.append(
+            f"{r.arch:<24}{r.shape:<13}{r.mesh:<8}"
+            f"{r.t_compute*1e3:>11.2f}{r.t_memory*1e3:>11.2f}"
+            f"{r.t_collective*1e3:>11.2f}{r.bottleneck:>11}"
+            f"{r.useful_flops_ratio*100:>8.1f}%{r.roofline_fraction*100:>9.1f}%"
+        )
+    return "\n".join(lines)
+
+
+def save_reports(reports: list[RooflineReport], path: str):
+    with open(path, "w") as f:
+        json.dump([r.to_dict() for r in reports], f, indent=1)
+
+
+def load_reports(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)

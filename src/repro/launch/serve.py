@@ -1,0 +1,71 @@
+"""Serving driver: batched greedy decoding with a KV/state cache.
+
+Usage (CPU demo):
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \\
+      --batch 4 --prompt-len 16 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.distributed import step as step_lib
+from repro.launch.train import build_mesh
+from repro.models import transformer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (
+        registry.get_smoke_config(args.arch) if args.smoke else registry.get_config(args.arch)
+    )
+    if cfg.is_encoder_only:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
+    mesh = build_mesh(args.dp, args.tp)
+    serve_step, rules = step_lib.make_serve_step(cfg, mesh)
+
+    with mesh:
+        params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
+        max_len = args.prompt_len + args.gen
+        cache = transformer.init_cache(cfg, args.batch, max_len)
+        prompt = jax.random.randint(
+            jax.random.PRNGKey(args.seed + 1), (args.batch, args.prompt_len), 0, cfg.vocab
+        )
+        jstep = jax.jit(serve_step, donate_argnums=(2,))
+
+        # prefill by token-stepping the prompt (demo scale), then generate
+        toks = prompt[:, 0]
+        t0 = time.time()
+        for i in range(args.prompt_len):
+            logits, cache = jstep(params, prompt[:, i], cache, jnp.int32(i))
+        out = []
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(args.gen):
+            out.append(np.asarray(toks))
+            logits, cache = jstep(params, toks, cache, jnp.int32(args.prompt_len + i))
+            toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        dt = time.time() - t0
+        total = args.batch * (args.prompt_len + args.gen)
+        print(f"decoded {args.gen} tokens x {args.batch} seqs "
+              f"({total / dt:.1f} tok/s total on CPU demo)")
+        print("sample token ids:", np.stack(out, 1)[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

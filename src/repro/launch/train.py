@@ -1,0 +1,121 @@
+"""Training driver.
+
+Usage (CPU demo sizes):
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \\
+      --steps 50 --batch 8 --seq 64 --grad-sync mrd_zero1
+
+On a real cluster the same driver runs the full config on the production
+mesh (remove --smoke); the dry-run (launch/dryrun.py) proves those programs
+compile and fit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, NamedSharding
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.distributed import step as step_lib
+from repro.optim.optimizer import OptimizerConfig
+
+
+def build_mesh(dp: int, tp: int):
+    axes = ("data", "model") if tp > 1 else ("data",)
+    shape = (dp, tp) if tp > 1 else (dp,)
+    n = dp * tp
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes),
+        devices=jax.devices()[:n],
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.list_archs())
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--grad-sync", default="gspmd",
+                    choices=["gspmd", "mrd_zero1", "compressed"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=["none", "full", "dots"])
+    ap.add_argument("--schedule", default="cosine", choices=["cosine", "wsd", "const"])
+    ap.add_argument("--monitor-threshold", type=float, default=0.0,
+                    help="stop when the staged-MRD-certified loss < threshold")
+    ap.add_argument("--monitor-mode", default="inexact", choices=["inexact", "exact"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = (
+        registry.get_smoke_config(args.arch) if args.smoke else registry.get_config(args.arch)
+    )
+    mesh = build_mesh(args.dp, args.tp)
+    tcfg = step_lib.TrainConfig(
+        microbatches=args.microbatches,
+        remat=args.remat,
+        grad_sync=args.grad_sync,
+        monitor=args.monitor_threshold > 0,
+        monitor_mode=args.monitor_mode,
+        monitor_threshold=args.monitor_threshold,
+        optimizer=OptimizerConfig(
+            lr=args.lr, schedule=args.schedule,
+            warmup_steps=min(20, args.steps // 10),
+            total_steps=args.steps,
+        ),
+    )
+    train_step, init_state, state_specs, rules = step_lib.make_train_step(cfg, mesh, tcfg)
+    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+
+    with mesh:
+        state = init_state(jax.random.PRNGKey(args.seed))
+        shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs(state))
+        state = jax.device_put(state, shardings)
+        pipe = SyntheticPipeline(
+            cfg, DataConfig(batch=args.batch, seq_len=args.seq, seed=args.seed), mesh
+        )
+        if ck is not None and ck.latest_step() is not None:
+            step0 = ck.latest_step()
+            state = ck.restore(step0, jax.tree.map(np.asarray, jax.device_get(state)), shardings)
+            pipe.load_state_dict(ck.manifest(step0)["extra"]["data"])
+            print(f"resumed from checkpoint step {step0}")
+        jstep = jax.jit(train_step, donate_argnums=(0,))
+
+        t0 = time.time()
+        for i in range(args.steps):
+            state, metrics = jstep(state, pipe.next_batch())
+            if (i + 1) % args.log_every == 0 or i == 0:
+                print(
+                    f"step {int(state['step'])}: loss={float(metrics['loss']):.4f} "
+                    f"gnorm={float(metrics['grad_norm']):.3f} "
+                    f"({(time.time()-t0)/(i+1)*1e3:.0f} ms/step)"
+                )
+            if ck is not None and (i + 1) % args.ckpt_every == 0:
+                ck.save(int(state["step"]), state, extra={"data": pipe.state_dict()})
+            if tcfg.monitor and bool(metrics["converged"]):
+                print(
+                    f"ConvergenceMonitor ({args.monitor_mode}) certified "
+                    f"loss {float(metrics['monitor_value']):.4f} < "
+                    f"{args.monitor_threshold} at step {int(state['step'])} — stopping."
+                )
+                break
+        if ck is not None:
+            ck.save(int(state["step"]), state, extra={"data": pipe.state_dict()}, block=True)
+    print("done. final loss:", float(metrics["loss"]))
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Attention: GQA with RoPE, causal/bidirectional, sliding-window and
+local/global variants; three implementations:
+
+- ``full``: materialized scores — smoke tests and short sequences.
+- ``flash_scan``: pure-JAX online-softmax over KV chunks (differentiable,
+  O(Sq * chunk) memory) — the default for long sequences and the dry-run.
+- ``pallas``: the TPU flash kernel (``repro.kernels.flash_attention``) —
+  forward hot path on real hardware; numerically validated against ``full``
+  in interpret mode.
+
+All variants share mask semantics via ``position-based`` predicates so the
+same code path serves prefill (q_offset=0), chunked prefill, and decode
+(Sq=1, q_offset=cache_len).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int | None):
+    """[Sq, Skv] boolean validity mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def _grouped_scores(q, k):
+    """q: [B,Sq,KV,rep,hd]; k: [B,Skv,KV,hd] -> [B,KV,rep,Sq,Skv]."""
+    return jnp.einsum("bqgrh,bkgh->bgrqk", q, k)
+
+
+def attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset=0,
+    impl: str = "auto",
+    chunk: int = 1024,
+    k_valid_len=None,
+):
+    """q: [B,Sq,H,hd]; k,v: [B,Skv,KV,hd] -> [B,Sq,H,hd].
+
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``k_valid_len``: optional number of valid cache entries (rest masked).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    scale = hd**-0.5
+
+    if impl == "auto":
+        impl = "full" if Skv <= 2048 else "flash_scan"
+
+    qg = (q * scale).reshape(B, Sq, KV, rep, hd)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    if impl == "full":
+        k_pos = jnp.arange(Skv)
+        s = _grouped_scores(qg, k).astype(jnp.float32)
+        m = _mask(q_pos, k_pos, causal=causal, window=window)
+        if k_valid_len is not None:
+            m &= (k_pos < k_valid_len)[None, :]
+        s = jnp.where(m[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bgrqk,bkgh->bqgrh", p, v)
+        return out.reshape(B, Sq, H, hd)
+
+    if impl == "flash_scan":
+        # Tiled in BOTH q (outer scan) and kv (inner scan): transient score
+        # block is [B, H, q_chunk, chunk] regardless of sequence lengths.
+        q_chunk = min(chunk, Sq) if Sq > 1 else 1
+        nq = -(-Sq // q_chunk)
+        qpad = nq * q_chunk - Sq
+        if qpad:
+            qg_p = jnp.pad(qg, ((0, 0), (0, qpad), (0, 0), (0, 0), (0, 0)))
+        else:
+            qg_p = qg
+        qb = qg_p.reshape(B, nq, q_chunk, KV, rep, hd).transpose(1, 0, 2, 3, 4, 5)
+
+        nchunk = -(-Skv // chunk)
+        pad = nchunk * chunk - Skv
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kc = k.reshape(B, nchunk, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+        vc = v.reshape(B, nchunk, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+        valid = Skv if k_valid_len is None else k_valid_len
+
+        def q_body(_, q_in):
+            q_i, qi_idx = q_in  # [B, qc, KV, rep, hd]
+            qpos_i = q_offset + qi_idx * q_chunk + jnp.arange(q_chunk)
+
+            def kv_body(carry, inp):
+                m_run, l_run, acc = carry
+                ci, k_i, v_i = inp
+                k_pos = ci * chunk + jnp.arange(chunk)
+                s = _grouped_scores(q_i, k_i).astype(jnp.float32)
+                msk = _mask(qpos_i, k_pos, causal=causal, window=window)
+                msk &= (k_pos < valid)[None, :]
+                s = jnp.where(msk[None, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m_run, s.max(-1))
+                alpha = jnp.exp(m_run - m_new)
+                pr = jnp.exp(s - m_new[..., None])
+                l_new = l_run * alpha + pr.sum(-1)
+                acc = acc * alpha[..., None] + jnp.einsum(
+                    "bgrqk,bkgh->bgrqh", pr.astype(q.dtype), v_i
+                ).astype(jnp.float32)
+                return (m_new, l_new, acc), None
+
+            m0 = jnp.full((B, KV, rep, q_chunk), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, KV, rep, q_chunk), jnp.float32)
+            a0 = jnp.zeros((B, KV, rep, q_chunk, hd), jnp.float32)
+            (m_f, l_f, acc), _ = jax.lax.scan(
+                kv_body, (m0, l0, a0), (jnp.arange(nchunk), kc, vc)
+            )
+            out_i = acc / jnp.maximum(l_f, 1e-30)[..., None]
+            return None, out_i.astype(q.dtype)  # [B, KV, rep, qc, hd]
+
+        _, outs = jax.lax.scan(q_body, None, (qb, jnp.arange(nq)))
+        # outs: [nq, B, KV, rep, qc, hd] -> [B, Sq, H, hd]
+        out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * q_chunk, H, hd)
+        return out[:, :Sq]
+
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset
+        )
+
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int | None = None):
+    """Single-token decode: q [B,1,H,hd] against cache [B,S,KV,hd].
+
+    ``cache_len``: number of valid entries (scalar or [B]).  Window masking is
+    positional, so a rolling (modular) cache layout is handled by the caller
+    (`window`-sized caches store absolute positions implicitly: the caller
+    passes positions via cache ordering; here validity+window suffice)."""
+    # Always one-block ("full") attention for decode: Sq=1 so the score
+    # tensor is [B,H,1,S] (tiny), and critically it PRESERVES the cache's
+    # sequence sharding — the flash chunk reshape of a sequence-sharded
+    # cache forces GSPMD to all-gather the whole cache every step
+    # (measured: 2.7 s/step of ICI time on qwen decode_32k).  Softmax over
+    # the sharded S reduces via psum'd stats instead.
+    return attention(
+        q,
+        k_cache,
+        v_cache,
+        causal=False,  # decode: all valid cache entries precede the query
+        window=None,
+        q_offset=cache_len,  # not used when causal=False
+        impl="full",
+        k_valid_len=cache_len if window is None else None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Projection block (init + apply) shared by all transformer layers
+# ---------------------------------------------------------------------------
+
+
+def attn_init(key, cfg, dtype):
+    from repro.models.layers import dense_init
+
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), dtype, fan_in=cfg.n_heads * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def qkv_project(p, x, cfg, positions, theta: float):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    if theta > 0:
+        from repro.models.layers import apply_rope
+
+        q = apply_rope(q, positions, theta)
+        k = apply_rope(k, positions, theta)
+    from repro.distributed.sharding import constrain
+
+    return constrain(q, "q"), constrain(k, "k"), constrain(v, "v")

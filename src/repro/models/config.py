@@ -1,0 +1,141 @@
+"""Model configuration: a single dataclass covering all assigned families
+(dense / MoE / SSM / hybrid / VLM-backbone / audio-encoder)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None  # defaults to d_model // n_heads
+
+    # attention
+    rope_theta: float = 10000.0
+    rope_theta_global: Optional[float] = None  # gemma3 global layers (1M)
+    qkv_bias: bool = False
+    sliding_window: Optional[int] = None  # SWA on every attn layer (mixtral)
+    local_window: Optional[int] = None  # gemma3 local layers
+    pattern_local: int = 0  # gemma3: local layers per group
+    pattern_global: int = 0  # gemma3: global layers per group
+    causal: bool = True  # False => encoder-only (hubert)
+
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # ssm (mamba)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_version: int = 1  # 1 = mamba1 (falcon-mamba), 2 = mamba2 (zamba2)
+    ssm_headdim: int = 64  # mamba2
+    attn_every: int = 0  # hybrid: shared attn block applied every k ssm layers
+
+    # modality frontend (stub: precomputed embeddings are model inputs)
+    frontend: Optional[str] = None  # 'vision' | 'audio'
+    n_frontend_tokens: int = 0
+
+    # numerics / misc
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    act: str = "silu"
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    attn_impl: str = "auto"  # auto | full | flash_scan | pallas
+    # cost-calibration knobs (launch/calibrate.py): unroll scans so XLA's
+    # HloCostAnalysis (which visits loop bodies once) counts true totals
+    scan_unroll: bool = False
+    attn_chunk: int = 1024
+    ssm_chunk: int = 256
+    moe_seq_chunk: int = 8192  # bound MoE dispatch transients at long seq
+    kv_cache_dtype: str = "bf16"  # 'bf16' | 'int8' (blockwise-quantized cache)
+
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+        if self.family in ("ssm", "hybrid") and self.ssm_state <= 0:
+            raise ValueError(f"{self.name}: ssm family needs ssm_state > 0")
+        if self.family == "moe" and (self.n_experts <= 0 or self.top_k <= 0):
+            raise ValueError(f"{self.name}: moe family needs experts/top_k")
+
+    # --- derived ---
+    @property
+    def qk_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(1, -(-self.d_model // 16))  # ceil(d/16), mamba1 default
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim  # mamba2
+
+    @property
+    def is_encoder_only(self) -> bool:
+        return not self.causal
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    def n_params(self) -> int:
+        """Analytic total parameter count (for 6ND model-flops accounting)."""
+        d, f, V, hd = self.d_model, self.d_ff, self.vocab, self.head_dim
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        n = emb
+        if self.family in ("dense", "vlm", "audio"):
+            attn = d * (self.n_heads + 2 * self.n_kv_heads) * hd + self.qk_dim * d
+            mlp = 3 * d * f if self.act == "silu" else 2 * d * f
+            n += self.n_layers * (attn + mlp + 2 * d) + d
+        elif self.family == "moe":
+            attn = d * (self.n_heads + 2 * self.n_kv_heads) * hd + self.qk_dim * d
+            moe = self.n_experts * 3 * d * f + d * self.n_experts
+            n += self.n_layers * (attn + moe + 2 * d) + d
+        elif self.family == "ssm":
+            di, st, dtr = self.d_inner, self.ssm_state, self.dt_rank
+            per = (
+                d * 2 * di + self.ssm_conv * di + di
+                + di * (dtr + 2 * st) + dtr * di + di * st + di
+                + di * d + d
+            )
+            n += self.n_layers * per + d
+        elif self.family == "hybrid":
+            di, st = self.d_inner, self.ssm_state
+            nh = self.ssm_nheads
+            per = (
+                d * (2 * di + 2 * st + nh) + self.ssm_conv * (di + 2 * st)
+                + nh + di + di * d + d
+            )
+            n += self.n_layers * per + d
+            if self.attn_every:
+                attn = d * (self.n_heads + 2 * self.n_kv_heads) * hd + self.qk_dim * d
+                n += attn + 3 * d * f + 2 * d  # one shared block
+        return n
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if self.family != "moe":
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        inactive = self.n_layers * (self.n_experts - self.top_k) * 3 * d * f
+        return self.n_params() - inactive

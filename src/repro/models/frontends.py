@@ -1,0 +1,25 @@
+"""Modality frontend STUBS (per the assignment: ``[audio]``/``[vlm]`` specify
+the transformer backbone only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+These generate synthetic-but-shaped frontend outputs for smoke tests and
+examples; the dry-run uses ShapeDtypeStructs of the same shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+VISION_EMBED_DIM = 1024  # InternViT output width (projected to d_model)
+AUDIO_FEAT_DIM = 80  # log-mel-like frame features
+
+
+def vision_patches(key, batch: int, n_patches: int, dtype=jnp.bfloat16):
+    """Stub InternViT: precomputed patch embeddings [B, P, 1024]."""
+    return jax.random.normal(key, (batch, n_patches, VISION_EMBED_DIM), dtype)
+
+
+def audio_frames(key, batch: int, n_frames: int, dtype=jnp.bfloat16):
+    """Stub wav2vec2-style conv frontend: frame features [B, T, 80]."""
+    return jax.random.normal(key, (batch, n_frames, AUDIO_FEAT_DIM), dtype)

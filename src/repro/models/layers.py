@@ -1,0 +1,105 @@
+"""Shared functional layers: norms, embeddings, RoPE, MLPs, initializers.
+
+Pure-functional style (param pytrees of jnp arrays); no framework deps.
+Compute follows a mixed-precision policy: params in ``cfg.param_dtype``,
+matmuls in ``cfg.compute_dtype``, normalization statistics in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[
+        name
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, *, fan_in: int | None = None):
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def rmsnorm_init(d, dtype):
+    return jnp.zeros((d,), dtype)  # stored as (1 + w) convention
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (llama-style half rotation)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, H, hd]; positions: [B, S] or [S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d, f, dtype, act: str):
+    ks = jax.random.split(key, 3)
+    if act == "silu":  # SwiGLU
+        return {
+            "w1": dense_init(ks[0], (d, f), dtype),
+            "w3": dense_init(ks[1], (d, f), dtype),
+            "w2": dense_init(ks[2], (f, d), dtype, fan_in=f),
+        }
+    return {
+        "w1": dense_init(ks[0], (d, f), dtype),
+        "w2": dense_init(ks[2], (f, d), dtype, fan_in=f),
+    }
+
+
+def mlp_apply(p, x, act: str):
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(x @ p["w1"])
+    return h @ p["w2"]
+
+
+def mlp_flops(d, f, act: str, tokens: int) -> float:
+    nmat = 3 if act == "silu" else 2
+    return 2.0 * nmat * d * f * tokens

@@ -1,0 +1,283 @@
+"""State-space blocks: Mamba-1 (falcon-mamba) and Mamba-2/SSD (zamba2).
+
+TPU adaptation (see DESIGN.md): the CUDA selective-scan kernel is a
+register-resident sequential scan; on TPU we use a **chunked** formulation —
+sequence is processed in chunks with an intra-chunk associative scan (mamba1)
+or the SSD matmul form (mamba2, MXU-friendly), carrying only chunk-boundary
+states.  Memory per layer: O(B * chunk * d_inner * state) transient +
+O(B * S/chunk * d_inner * state) boundaries, instead of O(B*S*d_inner*state).
+
+The sequential-over-chunks loop is `lax.scan`; the Pallas kernel
+(`repro.kernels.selective_scan`) implements the same chunking with the carry
+held in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (kernel size cfg.ssm_conv, typically 4)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x, w, b):
+    """x: [B,S,C]; w: [K,C]; b: [C]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    S = x.shape[1]
+    for i in range(K):  # K is tiny (4): unrolled shifts beat conv_general here
+        out = out + pad[:, i : i + S] * w[i]
+    return out + b
+
+
+def conv1d_step(x_tok, conv_state, w, b):
+    """x_tok: [B,C]; conv_state: [B,K-1,C] (past inputs).  Returns (y, state)."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_state, x_tok[:, None]], axis=1)  # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return y, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba-7b)
+# ---------------------------------------------------------------------------
+
+
+def mamba1_init(key, cfg, dtype):
+    d, di, st, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, st + 1, dtype=jnp.float32), (di, st))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, di), dtype, fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * st), dtype, fan_in=di),
+        "dt_proj": dense_init(ks[3], (dtr, di), dtype, fan_in=dtr),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(A),  # fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), dtype, fan_in=di),
+    }
+
+
+def _mamba1_ssm_inputs(p, x1, cfg):
+    """x1: [B,S,di] post-conv activations -> (decay, Bx, Cs)."""
+    st, dtr = cfg.ssm_state, cfg.dt_rank
+    xdbc = x1 @ p["x_proj"]
+    dt_r, Bs, Cs = jnp.split(xdbc, [dtr, dtr + st], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # [B,S,di]
+    A = -jnp.exp(p["A_log"])  # [di,st]
+    decay = jnp.exp(dt[..., None] * A)  # [B,S,di,st]
+    Bx = (dt * x1.astype(jnp.float32))[..., None] * Bs.astype(jnp.float32)[:, :, None, :]
+    return decay, Bx, Cs.astype(jnp.float32)
+
+
+def _chunk_scan(p, x1, cfg, h0, chunk: int):
+    """Sequential-over-chunks selective scan.
+
+    x1: [B,S,di] post-conv activations (compute dtype).  The f32 SSM inputs
+    (decay, Bx) are computed *inside* the chunk body so only
+    O(B*chunk*di*st) f32 is ever live (full-seq materialization is ~TB at 4k
+    x d_inner 8k).  Returns (y [B,S,di] fp32, h_final)."""
+    B, S, di = x1.shape
+    st = cfg.ssm_state
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        x1 = jnp.pad(x1, ((0, 0), (0, pad), (0, 0)))
+    xc = x1.reshape(B, nc, chunk, di).transpose(1, 0, 2, 3)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def body(h, x_i):  # x_i: [B,chunk,di]
+        d_i, b_i, c_i = _mamba1_ssm_inputs(p, x_i, cfg)
+        cumA, cumB = jax.lax.associative_scan(combine, (d_i, b_i), axis=1)
+        h_t = cumA * h[:, None] + cumB  # [B,chunk,di,st]
+        y = jnp.einsum("bqds,bqs->bqd", h_t, c_i)
+        return h_t[:, -1], y
+
+    h_f, ys = jax.lax.scan(body, h0, xc, unroll=cfg.scan_unroll)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nc * chunk, di)
+    return y[:, :S], h_f
+
+
+def mamba1_apply(p, x, cfg, *, chunk: int = 256):
+    """Full-sequence mamba1 block. x: [B,S,d] -> [B,S,d]."""
+    B, S, _ = x.shape
+    chunk = min(chunk, S)
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1 = jax.nn.silu(causal_conv1d(x1, p["conv_w"], p["conv_b"]))
+    h0 = jnp.zeros((B, di, cfg.ssm_state), jnp.float32)
+    y, _ = _chunk_scan(p, x1, cfg, h0, chunk)
+    y = y + p["D"] * x1.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba1_init_state(cfg, batch, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+def mamba1_decode(p, x_tok, state, cfg):
+    """One decode step. x_tok: [B,d] -> (y [B,d], new state)."""
+    xz = x_tok @ p["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1, conv_state = conv1d_step(x1, state["conv"], p["conv_w"], p["conv_b"])
+    x1 = jax.nn.silu(x1)
+    decay, Bx, Cs = _mamba1_ssm_inputs(p, x1[:, None], cfg)
+    h = decay[:, 0] * state["h"] + Bx[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, Cs[:, 0]) + p["D"] * x1.astype(jnp.float32)
+    y = y.astype(x_tok.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg, dtype):
+    """Projections kept separate (z / x / BC / dt) so each output dim can be
+    TP-sharded cleanly (the fused HF layout's split boundaries don't align
+    with shard boundaries — see DESIGN.md S4)."""
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_nheads
+    ks = jax.random.split(key, 6)
+    conv_dim = di + 2 * st
+    return {
+        "in_z": dense_init(ks[0], (d, di), dtype),
+        "in_x": dense_init(ks[1], (d, di), dtype),
+        "in_bc": dense_init(ks[2], (d, 2 * st), dtype),
+        "in_dt": dense_init(ks[4], (d, nh), dtype),
+        "conv_w": dense_init(ks[3], (cfg.ssm_conv, conv_dim), dtype, fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[5], (di, d), dtype, fan_in=di),
+    }
+
+
+def _mamba2_split(p, x, cfg):
+    z = x @ p["in_z"]
+    xbc = jnp.concatenate([x @ p["in_x"], x @ p["in_bc"]], axis=-1)
+    dt = x @ p["in_dt"]
+    return z, xbc, dt  # dt: [.., nh]
+
+
+def _ssd_scan(xh, Bs, Cs, dt, A, h0, chunk: int, unroll: bool = False):
+    """SSD chunked scan (sequential over chunks, matmul-form within chunk).
+
+    xh: [B,S,nh,hp]; Bs, Cs: [B,S,st]; dt: [B,S,nh] (post-softplus, f32);
+    A: [nh] (negative); h0: [B,nh,hp,st].  f32 casting happens per chunk.
+    Returns (y [B,S,nh,hp] fp32, h_final)."""
+    B, S, nh, hp = xh.shape
+    st = Bs.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    def to_chunks(a):
+        return a.reshape(B, nc, chunk, *a.shape[2:]).transpose(1, 0, *range(2, a.ndim + 1))
+
+    # chunk the *narrow* inputs; dA/dt*x are formed per-chunk in f32 inside
+    # the body (full-seq f32 [B,S,nh,hp] is tens of GB at 4k x d_inner 5k)
+    xc, bc, cc, dtc = to_chunks(xh), to_chunks(Bs), to_chunks(Cs), to_chunks(dt)
+
+    def body(h, inp):
+        xr_i, b_i, c_i, dt_i = inp  # [B,q,nh,hp], [B,q,st], [B,q,st], [B,q,nh]
+        dt_i = dt_i.astype(jnp.float32)
+        da_i = dt_i * A  # [B,q,nh] (negative)
+        x_i = (dt_i[..., None] * xr_i.astype(jnp.float32))
+        b_i = b_i.astype(jnp.float32)
+        c_i = c_i.astype(jnp.float32)
+        cum = jnp.cumsum(da_i, axis=1)  # [B,q,nh]
+        # intra-chunk: attention-like matmul form
+        cb = jnp.einsum("bqs,bks->bqk", c_i, b_i)  # [B,q,q]
+        seg = cum[:, :, None, :] - cum[:, None, :, :]  # [B,q,k,nh]
+        q = x_i.shape[1]
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        L = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)  # [B,q,k,nh]
+        y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", cb, L, x_i)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bqs,bhps,bqh->bqhp", c_i, h, jnp.exp(cum))
+        # new chunk state
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)  # [B,q,nh]
+        s_new = jnp.einsum("bqhp,bqs,bqh->bhps", x_i, b_i, decay_to_end)
+        h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h + s_new
+        return h_new, y_intra + y_inter
+
+    h_f, ys = jax.lax.scan(body, h0, (xc, bc, cc, dtc), unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, nh, hp)
+    return y[:, :S], h_f
+
+
+def mamba2_apply(p, x, cfg, *, chunk: int = 64):
+    """Full-sequence mamba2 block. x: [B,S,d] -> [B,S,d]."""
+    from repro.models.layers import rmsnorm
+
+    B, S, _ = x.shape
+    di, st, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    z, xbc, dt = _mamba2_split(p, x, cfg)
+    xbc = jax.nn.silu(causal_conv1d(xbc, p["conv_w"], p["conv_b"]))
+    x1, Bs, Cs = jnp.split(xbc, [di, di + st], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = x1.reshape(B, S, nh, hp)
+    h0 = jnp.zeros((B, nh, hp, st), jnp.float32)
+    y, _ = _ssd_scan(xh, Bs, Cs, dt, A, h0, chunk, unroll=cfg.scan_unroll)
+    y = y + p["D"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba2_init_state(cfg, batch, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def mamba2_decode(p, x_tok, state, cfg):
+    """One decode step. x_tok: [B,d] -> (y [B,d], new state)."""
+    from repro.models.layers import rmsnorm
+
+    B = x_tok.shape[0]
+    di, st, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    z, xbc, dt = _mamba2_split(p, x_tok, cfg)
+    xbc, conv_state = conv1d_step(xbc, state["conv"], p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    x1, Bs, Cs = jnp.split(xbc, [di, di + st], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    A = -jnp.exp(p["A_log"])
+    xh = x1.reshape(B, nh, hp).astype(jnp.float32)
+    decay = jnp.exp(dt * A)  # [B,nh]
+    h = decay[:, :, None, None] * state["h"] + jnp.einsum(
+        "bhp,bs,bh->bhps", xh, Bs.astype(jnp.float32), dt
+    )
+    y = jnp.einsum("bhps,bs->bhp", h, Cs.astype(jnp.float32)) + p["D"][:, None] * xh
+    y = y.reshape(B, di).astype(x_tok.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], {"h": h, "conv": conv_state}

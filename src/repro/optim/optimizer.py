@@ -1,0 +1,142 @@
+"""Optimizers (AdamW, Lion) + LR schedules (cosine, WSD, const).
+
+Tree form (gspmd mode): fp32 master + moments sharded like the params
+(FSDP+TP), bf16 working params re-derived each step.
+Vector form (MRD-ZeRO-1 mode): the same math on flat fp32 shards owned by
+each DP rank (reduce-scattered grads in, all-gathered params out).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"  # 'adamw' | 'lion' | 'sgd'
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"  # 'cosine' | 'wsd' | 'const'
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    wsd_decay_frac: float = 0.1  # minicpm's WSD: final decay fraction
+
+
+def schedule_lr(ocfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32)
+    if ocfg.warmup_steps <= 0:
+        warm = jnp.ones((), jnp.float32)
+    else:
+        warm = jnp.minimum(step / ocfg.warmup_steps, 1.0)
+    if ocfg.schedule == "const":
+        return ocfg.lr * warm
+    total = float(max(ocfg.total_steps, 1))
+    if ocfg.schedule == "cosine":
+        t = jnp.clip((step - ocfg.warmup_steps) / max(total - ocfg.warmup_steps, 1), 0, 1)
+        return ocfg.lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    if ocfg.schedule == "wsd":  # warmup -> stable -> linear decay tail
+        decay_start = total * (1 - ocfg.wsd_decay_frac)
+        tail = jnp.clip((step - decay_start) / max(total - decay_start, 1), 0, 1)
+        return ocfg.lr * warm * (1 - tail)
+    raise ValueError(ocfg.schedule)
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    if max_norm <= 0:
+        return tree, jnp.zeros((), jnp.float32)
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), gnorm
+
+
+# --- tree form -------------------------------------------------------------
+
+
+def init_opt_state(params):
+    f32 = lambda p: p.astype(jnp.float32)
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "master": jax.tree.map(f32, params),
+        "mu": jax.tree.map(z, params),
+        "nu": jax.tree.map(z, params),
+    }
+
+
+def apply_update(grads, opt, ocfg: OptimizerConfig, step, param_dtype):
+    """grads: fp32 tree. Returns (new_params(param_dtype), new_opt)."""
+    lr = schedule_lr(ocfg, step)
+    t = step.astype(jnp.float32) + 1.0
+
+    def upd(g, m, mu, nu):
+        g = g.astype(jnp.float32)
+        if ocfg.name == "sgd":
+            new_m = m - lr * (g + ocfg.weight_decay * m)
+            return new_m, mu, nu
+        if ocfg.name == "lion":
+            u = jnp.sign(ocfg.beta1 * mu + (1 - ocfg.beta1) * g)
+            new_mu = ocfg.beta2 * mu + (1 - ocfg.beta2) * g
+            new_m = m - lr * (u + ocfg.weight_decay * m)
+            return new_m, new_mu, nu
+        # adamw
+        new_mu = ocfg.beta1 * mu + (1 - ocfg.beta1) * g
+        new_nu = ocfg.beta2 * nu + (1 - ocfg.beta2) * g * g
+        mu_hat = new_mu / (1 - ocfg.beta1**t)
+        nu_hat = new_nu / (1 - ocfg.beta2**t)
+        new_m = m - lr * (mu_hat / (jnp.sqrt(nu_hat) + ocfg.eps) + ocfg.weight_decay * m)
+        return new_m, new_mu, new_nu
+
+    g_l, tdef = jax.tree.flatten(grads)
+    outs = [
+        upd(g, m, mu, nu)
+        for g, m, mu, nu in zip(
+            g_l,
+            jax.tree.leaves(opt["master"]),
+            jax.tree.leaves(opt["mu"]),
+            jax.tree.leaves(opt["nu"]),
+        )
+    ]
+    master = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    mu = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    nu = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    params = jax.tree.map(lambda m: m.astype(param_dtype), master)
+    return params, {"master": master, "mu": mu, "nu": nu}
+
+
+# --- vector form (ZeRO-1 shards) -------------------------------------------
+
+
+def init_opt_vector(n: int):
+    return {
+        "master": jnp.zeros((n,), jnp.float32),
+        "mu": jnp.zeros((n,), jnp.float32),
+        "nu": jnp.zeros((n,), jnp.float32),
+    }
+
+
+def apply_update_vector(g, opt, ocfg: OptimizerConfig, step):
+    """g: fp32 [n] gradient shard. Returns (new_master [n], new_opt)."""
+    lr = schedule_lr(ocfg, step)
+    t = step.astype(jnp.float32) + 1.0
+    m, mu, nu = opt["master"], opt["mu"], opt["nu"]
+    if ocfg.name == "sgd":
+        new_m = m - lr * (g + ocfg.weight_decay * m)
+        return new_m, {"master": new_m, "mu": mu, "nu": nu}
+    if ocfg.name == "lion":
+        u = jnp.sign(ocfg.beta1 * mu + (1 - ocfg.beta1) * g)
+        new_mu = ocfg.beta2 * mu + (1 - ocfg.beta2) * g
+        new_m = m - lr * (u + ocfg.weight_decay * m)
+        return new_m, {"master": new_m, "mu": new_mu, "nu": nu}
+    new_mu = ocfg.beta1 * mu + (1 - ocfg.beta1) * g
+    new_nu = ocfg.beta2 * nu + (1 - ocfg.beta2) * g * g
+    mu_hat = new_mu / (1 - ocfg.beta1**t)
+    nu_hat = new_nu / (1 - ocfg.beta2**t)
+    new_m = m - lr * (mu_hat / (jnp.sqrt(nu_hat) + ocfg.eps) + ocfg.weight_decay * m)
+    return new_m, {"master": new_m, "mu": new_mu, "nu": new_nu}

@@ -1,0 +1,129 @@
+"""Elastic training controller: the shrink-on-failure loop as a utility.
+
+Ties together the pieces proven individually in tests:
+heartbeat failure detection (`fault_tolerance.FailureDetector`) ->
+mesh shrink (`shrink_mesh`, possibly to a non-power-of-two DP extent —
+handled natively by the MRD collectives) -> checkpoint restore with
+re-sharding -> training resume with the batch rounded to the new DP extent.
+
+The controller is runtime-agnostic: `step_fn_factory(mesh)` rebuilds the
+train step for whatever mesh survives, and the data pipeline's state
+(deterministic, step-keyed) guarantees the token stream continues exactly
+where it stopped regardless of the new topology.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.runtime.fault_tolerance import (
+    FailureDetector,
+    HeartbeatConfig,
+    shrink_mesh,
+)
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    ckpt_every: int = 50
+    heartbeat: HeartbeatConfig = dataclasses.field(default_factory=HeartbeatConfig)
+    max_restarts: int = 8
+    dp_axis: str = "data"
+
+
+class ElasticTrainer:
+    """Drive training across failures.
+
+    ``step_fn_factory(mesh) -> (train_step, init_state, state_specs, rules)``
+    (the signature of ``repro.distributed.step.make_train_step`` partially
+    applied with cfg/tcfg); ``pipe_factory(mesh)`` builds the data pipeline.
+    """
+
+    def __init__(
+        self,
+        mesh,
+        step_fn_factory: Callable,
+        pipe_factory: Callable,
+        checkpointer: Checkpointer,
+        cfg: ElasticConfig = ElasticConfig(),
+    ):
+        self.mesh = mesh
+        self.step_fn_factory = step_fn_factory
+        self.pipe_factory = pipe_factory
+        self.ck = checkpointer
+        self.cfg = cfg
+        self.restarts = 0
+        self._build()
+
+    def _build(self):
+        (self.train_step, self.init_state, self.state_specs, self.rules) = (
+            self.step_fn_factory(self.mesh)
+        )
+        self.pipe = self.pipe_factory(self.mesh)
+        self._jit = jax.jit(self.train_step)
+        self.detector = FailureDetector(
+            [d.id for d in np.ravel(np.asarray(self.mesh.devices))],
+            self.cfg.heartbeat,
+        )
+
+    def init_or_restore(self, key):
+        with self.mesh:
+            state = self.init_state(key)
+            shardings = jax.tree.map(
+                lambda s: NamedSharding(self.mesh, s), self.state_specs(state)
+            )
+            latest = self.ck.latest_step()
+            if latest is not None:
+                # params + step survive topology changes; optimizer moments
+                # restart on reshard (safe default; see fault-tolerance test)
+                tpl = {"params": state["params"], "step": state["step"]}
+                restored = self.ck.restore(latest, jax.tree.map(
+                    lambda x: np.zeros(x.shape, x.dtype), tpl))
+                state["params"] = restored["params"]
+                state["step"] = jnp.asarray(restored["step"])
+                self.pipe.load_state_dict(self.ck.manifest(latest)["extra"]["data"])
+            state = jax.device_put(state, shardings)
+        return state
+
+    def handle_failure(self, state, failed_device_ids: set[int]):
+        """Shrink the mesh, rebuild, restore from the latest checkpoint."""
+        if self.restarts >= self.cfg.max_restarts:
+            raise RuntimeError("restart budget exhausted")
+        self.restarts += 1
+        self.ck.wait()
+        new_mesh, kept = shrink_mesh(self.mesh, failed_device_ids, self.cfg.dp_axis)
+        self.mesh = new_mesh
+        self._build()
+        return self.init_or_restore(jax.random.PRNGKey(0))
+
+    def run(self, state, n_steps: int, *, fail_at: Optional[dict] = None):
+        """Train; ``fail_at`` = {step: {device_ids}} injects failures (tests).
+        Returns (state, losses)."""
+        losses = []
+        i = int(state["step"])
+        target = i + n_steps
+        while i < target:
+            if fail_at and i in fail_at:
+                ids = fail_at.pop(i)
+                state = self.handle_failure(state, ids)
+                i = int(state["step"])
+                continue
+            with self.mesh:
+                state, metrics = self._jit(state, self.pipe.next_batch())
+            losses.append(float(metrics["loss"]))
+            i += 1
+            for d in np.ravel(np.asarray(self.mesh.devices)):
+                self.detector.heartbeat(d.id, now=time.time())
+            if i % self.cfg.ckpt_every == 0:
+                self.ck.save(i, state, extra={"data": self.pipe.state_dict()})
+        self.ck.save(int(state["step"]), state,
+                     extra={"data": self.pipe.state_dict()}, block=True)
+        return state, losses

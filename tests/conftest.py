@@ -1,0 +1,7 @@
+# NOTE: do NOT set XLA_FLAGS / forced device counts here — unit tests and
+# benches must see the real single CPU device.  Only launch/dryrun.py forces
+# 512 host devices, and device-executor tests spawn subprocesses.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,71 @@
+"""Pallas flash-attention kernel vs pure-jnp oracle (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _qkv(seed, B, Sq, Skv, H, KV, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (
+        jax.random.normal(ks[0], (B, Sq, H, hd), dtype),
+        jax.random.normal(ks[1], (B, Skv, KV, hd), dtype),
+        jax.random.normal(ks[2], (B, Skv, KV, hd), dtype),
+    )
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Skv,H,KV,hd",
+    [
+        (1, 128, 128, 4, 4, 64),     # MHA, square
+        (2, 128, 256, 8, 2, 64),     # GQA rep=4, rectangular
+        (1, 256, 256, 4, 1, 128),    # MQA, hd=128
+        (1, 64, 192, 2, 2, 80),      # hubert/zamba2-like hd=80
+    ],
+)
+def test_kernel_matches_ref_shapes(dtype, B, Sq, Skv, H, KV, hd):
+    q, k, v = _qkv(0, B, Sq, Skv, H, KV, hd, dtype)
+    out = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **TOL[dtype]
+    )
+
+
+@pytest.mark.parametrize("window", [None, 32, 128])
+def test_kernel_sliding_window(window):
+    q, k, v = _qkv(1, 1, 128, 128, 4, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, bq=64, bk=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_kernel_bidirectional():
+    q, k, v = _qkv(2, 2, 128, 128, 4, 4, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=False, bq=64, bk=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_kernel_decode_offset():
+    """Sq=1 with q_offset = cache length (decode step)."""
+    q, k, v = _qkv(3, 2, 1, 256, 8, 8, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_offset=255, bq=1, bk=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, q_offset=255)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_kernel_unaligned_lengths():
+    """Sq/Skv not multiples of the block sizes (padding paths)."""
+    q, k, v = _qkv(4, 1, 100, 150, 4, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)

@@ -1,0 +1,68 @@
+"""The staged (non-blocking) MRD Allreduce state machine — paper Fig. 4."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import nonblocking as nb
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 5, 8, 11, 16])
+def test_cycle_produces_reduction(p):
+    rng = np.random.default_rng(p)
+    x = jnp.asarray(rng.standard_normal((p, 4)).astype(np.float32))
+    st = nb.init(x)
+    clen = nb.cycle_length(p)
+    for i in range(clen):
+        st = nb.step(st, x, p=p, op="max")
+        assert bool(st["flag"]) == (i == clen - 1)
+    np.testing.assert_allclose(
+        np.asarray(st["result"]), np.broadcast_to(np.asarray(x).max(0), (p, 4)),
+        rtol=1e-6,
+    )
+    assert int(st["cycles"]) == 1
+
+
+@pytest.mark.parametrize("p", [3, 8])
+def test_relatch_between_cycles(p):
+    """Values contributed mid-cycle are ignored; each cycle reduces the values
+    latched at its start (the paper's statechart semantics)."""
+    clen = nb.cycle_length(p)
+    v0 = jnp.arange(p, dtype=jnp.float32)
+    v_mid = jnp.full((p,), 1e9, jnp.float32)
+    v1 = -jnp.arange(p, dtype=jnp.float32)
+
+    st = nb.init(v0)
+    for i in range(clen):
+        st = nb.step(st, v0 if i == 0 else v_mid, p=p, op="max")
+    np.testing.assert_allclose(np.asarray(st["result"]), float(p - 1))
+
+    for i in range(clen):
+        st = nb.step(st, v1 if i == 0 else v_mid, p=p, op="max")
+    np.testing.assert_allclose(np.asarray(st["result"]), 0.0)
+    assert int(st["cycles"]) == 2
+
+
+def test_cycle_length_matches_paper():
+    for p, expect in [(1, 1), (2, 1), (4, 2), (5, 4), (8, 3), (12, 5), (16, 4)]:
+        assert nb.cycle_length(p) == expect
+
+
+def test_staged_equals_blocking():
+    p = 7
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((p, 3)), jnp.float32)
+    out = nb.run_blocking(x, p=p, op="min")
+    np.testing.assert_allclose(
+        np.asarray(out), np.broadcast_to(np.asarray(x).min(0), (p, 3)), rtol=1e-6
+    )
+
+
+def test_step_is_jittable():
+    p = 6
+    x = jnp.ones((p,), jnp.float32)
+    st = nb.init(x)
+    step = jax.jit(lambda s, v: nb.step(s, v, p=p, op="sum"))
+    for _ in range(nb.cycle_length(p)):
+        st = step(st, x)
+    np.testing.assert_allclose(np.asarray(st["result"]), float(p))
