@@ -1,21 +1,28 @@
 """Paper S2 table: MRD cost model — steps, messages, volume vs p, and the
-alpha-beta time comparison against ring/tree/Rabenseifner schedules.
+alpha-beta time comparison against ring/tree/Rabenseifner schedules — plus a
+measured sweep of the plan layer (schedule x transform through the
+registries) on the sim executor.
 
-CSV: name,us_per_call,derived
+CSV on stdout: name,us_per_call,derived
+JSON: writes BENCH_mrd.json (schema: {"model": [...], "measured": [...]}) so
+the perf trajectory is machine-readable across PRs.
 """
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mrd, topology as T
+from repro.collectives import SCHEDULES, TRANSFORMS, plans
+from repro.collectives import schedules as T
+from repro.core import mrd
 
 
-def rows():
+def model_rows():
     out = []
     # --- closed-form validation: messages & steps per cycle (E1/E2) ---
     for p in (2, 3, 4, 5, 7, 8, 12, 16, 24, 32, 64, 100, 256):
@@ -45,23 +52,86 @@ def rows():
         t_ring = T.ring_allreduce_time(p, 8, link)
         out.append((f"model_mrd_scalar_p{p}", t_mrd * 1e6, round(t_mrd * 1e6, 2)))
         out.append((f"model_ring_scalar_p{p}", t_ring * 1e6, round(t_ring * 1e6, 2)))
-
-    # --- measured wall time of the sim executor (CPU, correctness path) ---
-    for p in (8, 16, 32):
-        x = jnp.asarray(np.random.default_rng(0).standard_normal((p, 4096)), jnp.float32)
-        f = jax.jit(lambda v: mrd.sim_allreduce(v, op="sum"))
-        f(x).block_until_ready()
-        t0 = time.perf_counter()
-        for _ in range(20):
-            f(x).block_until_ready()
-        us = (time.perf_counter() - t0) / 20 * 1e6
-        out.append((f"sim_allreduce_p{p}_n4096", round(us, 1), p))
     return out
 
 
-def main():
-    for name, us, derived in rows():
+def _time_call(f, *args, iters: int = 20) -> float:
+    f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        f(*args).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def measured_rows():
+    """Registry sweep: every (schedule x transform) pair the plan layer can
+    bind, measured on the sim executor (CPU correctness path)."""
+    out = []
+    rng = np.random.default_rng(0)
+    for p in (8, 12, 16, 32):
+        p0, _, _ = T.pivot(p)
+        n = max(4096, p0 * 256)
+        x = jnp.asarray(rng.standard_normal((p, n)), jnp.float32)
+        for sched_name, fam in sorted(SCHEDULES.items()):
+            if fam.min_axes > 1:
+                continue  # hierarchical needs two mesh axes (device-only)
+            for tf_name in sorted(TRANSFORMS):
+                if tf_name != "identity" and sched_name == "mrd":
+                    # int8 butterfly requantizes the full buffer every stage;
+                    # it is wire-valid but never the fast choice — skip.
+                    continue
+                plan = plans.allreduce_plan(
+                    schedule=sched_name, p=p, op="sum", transform=tf_name
+                )
+                pad = (-n) % plan.pad_quantum()
+                xp = jnp.pad(x, ((0, 0), (0, pad)))
+                f = jax.jit(plan.run)
+                us = _time_call(f, xp)
+                out.append(
+                    {
+                        "name": f"sim_{sched_name}_{tf_name}_p{p}_n{xp.shape[1]}",
+                        "schedule": sched_name,
+                        "transform": tf_name,
+                        "p": p,
+                        "n": int(xp.shape[1]),
+                        "us_per_call": round(us, 1),
+                    }
+                )
+
+    # legacy row set (kept so old trend lines keep their names)
+    for p in (8, 16, 32):
+        x = jnp.asarray(np.random.default_rng(0).standard_normal((p, 4096)), jnp.float32)
+        f = jax.jit(lambda v: mrd.sim_allreduce(v, op="sum"))
+        us = _time_call(f, x)
+        out.append(
+            {
+                "name": f"sim_allreduce_p{p}_n4096",
+                "schedule": "mrd",
+                "transform": "identity",
+                "p": p,
+                "n": 4096,
+                "us_per_call": round(us, 1),
+            }
+        )
+    return out
+
+
+def main(json_path: str = "BENCH_mrd.json"):
+    model = model_rows()
+    measured = measured_rows()
+    for name, us, derived in model:
         print(f"{name},{us},{derived}")
+    for r in measured:
+        print(f"{r['name']},{r['us_per_call']},{r['p']}")
+    payload = {
+        "model": [
+            {"name": n, "us_per_call": us, "derived": d} for n, us, d in model
+        ],
+        "measured": measured,
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {json_path}")
 
 
 if __name__ == "__main__":

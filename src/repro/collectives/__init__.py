@@ -1,0 +1,51 @@
+"""Unified collectives subsystem (the paper's reduction machinery, layered).
+
+Four explicit layers, each a registry so adding a schedule, backend, or
+wire format is a one-file change (DESIGN.md S1):
+
+1. **schedules**  — pure-data stage lists + the ``SCHEDULES`` registry
+   (``mrd`` | ``rabenseifner`` | ``hierarchical``);
+2. **executors**  — the ``Backend`` protocol + ``EXECUTORS`` registry
+   (``device`` | ``device_fused`` | ``sim``);
+3. **transforms** — wire formats + the ``TRANSFORMS`` registry
+   (``identity`` | ``int8``);
+4. **plans**      — :class:`CollectivePlan` binds one of each to axes/p
+   and exposes blocking ``run()`` and the paper's non-blocking
+   ``init()``/``step()`` state machine.
+"""
+
+from repro.collectives.executors import (  # noqa: F401
+    EXECUTORS,
+    Backend,
+    DeviceBackend,
+    FusedDeviceBackend,
+    OPS,
+    SimBackend,
+    make_backend,
+    register_executor,
+    resolve_op,
+)
+from repro.collectives.plans import (  # noqa: F401
+    CollectivePlan,
+    allgather_plan,
+    allreduce_plan,
+    exec_stage,
+    reduce_scatter_plan,
+    tree_allreduce,
+)
+from repro.collectives.schedules import (  # noqa: F401
+    SCHEDULES,
+    Phase,
+    ScheduleFamily,
+    Stage,
+    get_schedule,
+    pivot,
+    register_schedule,
+)
+from repro.collectives.transforms import (  # noqa: F401
+    TRANSFORMS,
+    IdentityTransform,
+    Int8BlockwiseTransform,
+    register_transform,
+    resolve_transform,
+)

@@ -1,46 +1,15 @@
-"""Gradient compression: blockwise int8 quantization + error feedback.
+"""Deprecated shim: gradient compression moved to
+``repro.collectives.transforms`` (the payload-transform layer).
 
-Used by the ``compressed`` grad-sync mode: the reduce-scatter halves are
-quantized before each ``ppermute`` (wire bytes / 2 vs bf16, / 4 vs fp32, plus
-~1.6% scale overhead) and dequant-accumulated on receive — that accumulate is
-the ``mrd_combine`` Pallas kernel's job on TPU.
-
-Error feedback (EF-SGD style) is applied at the grad-sync level: the residual
-of the *first* quantization of the local contribution is carried to the next
-step.  (Per-stage requantization error inside the butterfly is secondary and
-documented in EXPERIMENTS.md.)
+``compressed_reduce_scatter(vec, axis)`` is now
+``reduce_scatter_plan(axes=(axis,), transform="int8").run(vec)``.
+This module keeps the original quantization API importable.
 """
 
-from __future__ import annotations
-
-import jax
-import jax.numpy as jnp
-
-BLOCK = 256
-
-
-def quantize(x, block: int = BLOCK):
-    """x: [n] float -> (q int8 [n], scales f32 [n/block]). n % block == 0."""
-    n = x.shape[0]
-    assert n % block == 0, (n, block)
-    xb = x.astype(jnp.float32).reshape(n // block, block)
-    amax = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
-    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
-    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
-    return q.reshape(n), scale[:, 0]
-
-
-def dequantize(q, scales, block: int = BLOCK):
-    n = q.shape[0]
-    xb = q.astype(jnp.float32).reshape(n // block, block) * scales[:, None]
-    return xb.reshape(n)
-
-
-def quantization_error(x, block: int = BLOCK):
-    q, s = quantize(x, block)
-    return x.astype(jnp.float32) - dequantize(q, s, block)
-
-
-def wire_bytes_factor(dtype_bytes: int = 4, block: int = BLOCK) -> float:
-    """Bytes-on-wire ratio of compressed vs uncompressed payloads."""
-    return (1.0 + 4.0 / block) / dtype_bytes
+from repro.collectives.transforms import (  # noqa: F401
+    BLOCK,
+    dequantize,
+    quantization_error,
+    quantize,
+    wire_bytes_factor,
+)

@@ -1,0 +1,389 @@
+"""Layer 4 of the collectives subsystem: *plans*.
+
+A :class:`CollectivePlan` binds one choice from each lower layer —
+schedule (``repro.collectives.schedules``), executor
+(``repro.collectives.executors``), payload transform
+(``repro.collectives.transforms``) — plus a reduction op, to a concrete
+communication domain: named mesh axes (device executors, called inside
+``shard_map``) or a stacked rank count ``p`` (sim executor).
+
+Every collective in the repo — blocking or non-blocking, compressed or
+plain, single- or multi-axis — executes through this one stage
+interpreter, so there is exactly one code path to validate:
+
+- :meth:`CollectivePlan.run` executes all stages of all phases (blocking).
+- :meth:`CollectivePlan.init` / :meth:`CollectivePlan.step` expose the
+  paper's non-blocking state machine (Fig. 4): each ``step`` call
+  advances **one** communication stage via ``lax.switch`` over a stage
+  counter carried in a pytree; a cycle completes after
+  :meth:`cycle_length` calls, sets ``flag``, publishes the reduced
+  value, and re-latches the caller's current local contribution
+  ("each cycle begins with the backward shift").
+
+Chained (multi-axis) plans concatenate per-axis stage lists, which is
+how non-power-of-two DP domains and ``("pod","data")`` meshes run the
+same code path as a single axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.collectives import transforms as T
+from repro.collectives.executors import make_backend, resolve_op
+from repro.collectives.schedules import Phase, Stage, get_schedule, pivot
+
+# ---------------------------------------------------------------------------
+# The one stage interpreter (all backends, all transforms, all stage kinds)
+# ---------------------------------------------------------------------------
+
+
+def exec_stage(x, st: Stage, be, p: int, op: Callable, tf=None):
+    """Apply one schedule stage under backend ``be`` with transform ``tf``.
+
+    Reducing stages (``bshift``/``butterfly``/``rs``) send
+    ``tf.encode``-ed payloads and fold them back with ``tf.combine``;
+    copy stages (``fshift``/``ag``) always move raw buffers.
+    """
+    tf = tf or T.IdentityTransform()
+    p0, _, extra = pivot(p)
+    r = be.rank()
+    if st.kind in ("bshift", "butterfly"):
+        payload = tf.encode(x, be)
+        recv = tuple(be.permute(leaf, st.pairs) for leaf in payload)
+        # butterfly partners both hold the stage result, so each must combine
+        # the *canonical* (wire-roundtripped) views — otherwise a lossy
+        # transform leaves the two ranks with slightly different values and
+        # the allreduce contract (all ranks equal) silently breaks.
+        keep = tf.canonicalize(x, be) if st.kind == "butterfly" else x
+        combined = tf.combine(keep, recv, op, be)
+        pred = (r < extra) if st.kind == "bshift" else (r < p0)
+        return be.where(pred, combined, x)
+    if st.kind == "fshift":
+        recv = be.permute(x, st.pairs)
+        return be.where(r >= p0, recv, x)
+    if st.kind == "rs":
+        d = st.distance
+        lower, upper = be.split_half(x)
+        my_bit = (r & d) != 0
+        to_send = be.where(my_bit, lower, upper)
+        keep = be.where(my_bit, upper, lower)
+        payload = tf.encode(to_send, be)
+        recv = tuple(be.permute(leaf, st.pairs) for leaf in payload)
+        combined = tf.combine(keep, recv, op, be)
+        return be.where(r < p0, combined, keep)
+    if st.kind == "ag":
+        recv = be.permute(x, st.pairs)
+        my_bit = (r & st.distance) != 0
+        return be.where(my_bit, be.concat(recv, x), be.concat(x, recv))
+    raise ValueError(f"bad stage kind {st.kind}")
+
+
+def _run_phase(x, collective: str, be, p: int, op: Callable, tf):
+    if p == 1:
+        return x
+    for st in Phase(collective, 0).stages(p):
+        x = exec_stage(x, st, be, p, op, tf if collective != "allgather" else None)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# CollectivePlan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectivePlan:
+    """schedule x executor x transform x op, bound to axes (device) or p (sim).
+
+    ``phases`` defaults to the registered decomposition of ``schedule``;
+    pass it explicitly for primitive plans (a bare reduce-scatter or
+    all-gather, see :func:`reduce_scatter_plan` / :func:`allgather_plan`).
+    """
+
+    schedule: str = "mrd"
+    op: Any = "sum"  # 'sum' | 'max' | 'min' | callable
+    transform: Any = "identity"  # name | transform instance
+    executor: str = "device"  # 'device' | 'device_fused' | 'sim'
+    axes: Optional[tuple[str, ...]] = None  # device: mesh axis names (chained)
+    p: Optional[int] = None  # sim: stacked rank count
+    phases: Optional[tuple[Phase, ...]] = None
+    transform_kwargs: tuple = ()  # e.g. (('block', 128),)
+
+    def __post_init__(self):
+        if (self.axes is None) == (self.p is None):
+            raise ValueError("bind exactly one of axes= (device) or p= (sim)")
+        if self.p is not None and self.executor == "device":
+            object.__setattr__(self, "executor", "sim")
+        if self.axes is not None and isinstance(self.axes, str):
+            object.__setattr__(self, "axes", (self.axes,))
+        self._transform().validate_op(self.op)
+
+    # -- layer resolution ---------------------------------------------------
+
+    def _n_axes(self) -> int:
+        return len(self.axes) if self.axes is not None else 1
+
+    def _phases(self) -> tuple[Phase, ...]:
+        if self.phases is not None:
+            return self.phases
+        return tuple(get_schedule(self.schedule).phases(self._n_axes()))
+
+    def _transform(self):
+        return T.resolve_transform(self.transform, **dict(self.transform_kwargs))
+
+    def _backend(self, axis_index: int):
+        if self.axes is not None:
+            return make_backend(self.executor, axis=self.axes[axis_index])
+        return make_backend(self.executor, p=self.p)
+
+    def _size(self, axis_index: int) -> int:
+        """Static axis size; device sizes resolve inside the traced region."""
+        if self.p is not None:
+            return self.p
+        from repro import compat
+
+        return compat.axis_size(self.axes[axis_index])
+
+    # -- introspection ------------------------------------------------------
+
+    def bound_stages(self) -> list[tuple[Stage, int, int]]:
+        """Flat [(stage, axis_index, p)] across phases (allreduce plans)."""
+        out = []
+        for ph in self._phases():
+            if ph.collective != "allreduce":
+                raise ValueError(
+                    "stage-at-a-time stepping needs an allreduce-only plan "
+                    f"(schedule {self.schedule!r} has a {ph.collective} phase)"
+                )
+            p = self._size(ph.axis_index)
+            for st in ph.stages(p):
+                out.append((st, ph.axis_index, p))
+        return out
+
+    def cycle_length(self) -> int:
+        """Non-blocking calls per completed reduction (>= 1)."""
+        return max(len(self.bound_stages()), 1)
+
+    def pad_quantum(self) -> int:
+        """Required divisor of the (1-D) buffer length for this plan."""
+        q = self._transform().quantum
+        for ph in self._phases():
+            if ph.collective == "reduce_scatter":
+                q *= pivot(self._size(ph.axis_index))[0]
+        return q
+
+    # -- blocking execution -------------------------------------------------
+
+    def run(self, x):
+        """Execute all phases.  Allreduce-only plans accept a pytree; plans
+        with reduce-scatter/all-gather phases take a single array (device:
+        1-D local vector, sim: ``[p, n]`` stacked)."""
+        op = resolve_op(self.op)
+        tf = self._transform()
+        phases = self._phases()
+        ar_only = all(ph.collective == "allreduce" for ph in phases)
+        if ar_only:
+            for ph in phases:
+                be = self._backend(ph.axis_index)
+                p = self._size(ph.axis_index)
+                if p == 1:
+                    continue
+                x = jax.tree.map(
+                    lambda leaf: _run_phase(leaf, "allreduce", be, p, op, tf), x
+                )
+            return x
+        for ph in phases:
+            be = self._backend(ph.axis_index)
+            p = self._size(ph.axis_index)
+            if ph.collective == "reduce_scatter" and p > 1:
+                ndim = 2 if self.p is not None else 1
+                if x.ndim != ndim:
+                    raise ValueError(
+                        f"reduce-scatter phase needs a {ndim}-D buffer "
+                        f"({'[p, n] stacked' if ndim == 2 else 'rank-local 1-D'}), "
+                        f"got shape {x.shape}"
+                    )
+                n = x.shape[-1]
+                quantum = pivot(p)[0] * tf.quantum
+                if n % quantum:
+                    raise ValueError(
+                        f"reduce-scatter phase over p={p} needs len % {quantum} "
+                        f"== 0 (p0 x transform quantum), got {n}"
+                    )
+            x = _run_phase(x, ph.collective, be, p, op, tf)
+        return x
+
+    # -- non-blocking state machine (paper Fig. 4) --------------------------
+
+    def init(self, value) -> dict[str, Any]:
+        """Create the state machine's state, latching ``value`` as the first
+        cycle's contribution.  ``value``: per-rank pytree (device) or
+        ``[p, ...]`` stacked (sim)."""
+        return {
+            "stage": jnp.zeros((), jnp.int32),
+            "buf": value,
+            "result": jax.tree.map(jnp.zeros_like, value),
+            "flag": jnp.zeros((), jnp.bool_),  # True for exactly the completing call
+            "cycles": jnp.zeros((), jnp.int32),
+        }
+
+    def step(self, state: dict[str, Any], local_value) -> dict[str, Any]:
+        """Advance the non-blocking collective by one stage.
+
+        Returns the new state.  ``state['flag']`` is True iff this call
+        completed a cycle; then ``state['result']`` holds the reduction of
+        the values latched at that cycle's start.  ``local_value`` is
+        latched only when a new cycle begins (stage == 0), matching the
+        paper's statechart.
+        """
+        op = resolve_op(self.op)
+        tf = self._transform()
+        bound = self.bound_stages()
+        nstages = len(bound)
+
+        if nstages == 0:  # all axes size 1: every call is a complete cycle
+            return {
+                "stage": state["stage"],
+                "buf": local_value,
+                "result": local_value,
+                "flag": jnp.ones((), jnp.bool_),
+                "cycles": state["cycles"] + 1,
+            }
+
+        starting = state["stage"] == 0
+        buf = jax.tree.map(
+            lambda lv, b: jnp.where(starting, lv, b), local_value, state["buf"]
+        )
+
+        def _stage_fn(st, axis_index, p):
+            be = self._backend(axis_index)
+
+            def apply(b):
+                return jax.tree.map(
+                    lambda leaf: exec_stage(leaf, st, be, p, op, tf), b
+                )
+
+            return apply
+
+        buf = jax.lax.switch(
+            state["stage"], [_stage_fn(*b) for b in bound], buf
+        )
+
+        nxt = state["stage"] + 1
+        done = nxt == nstages
+        return {
+            "stage": jnp.where(done, 0, nxt),
+            "buf": buf,
+            "result": jax.tree.map(
+                lambda b, r: jnp.where(done, b, r), buf, state["result"]
+            ),
+            "flag": done,
+            "cycles": state["cycles"] + done.astype(jnp.int32),
+        }
+
+    def run_blocking(self, value):
+        """Drive the state machine through one full cycle (tests/reference)."""
+        st = self.init(value)
+        for _ in range(self.cycle_length()):
+            st = self.step(st, value)
+        return st["result"]
+
+
+# ---------------------------------------------------------------------------
+# Plan factories
+# ---------------------------------------------------------------------------
+
+
+def allreduce_plan(
+    *,
+    schedule: str = "mrd",
+    op: Any = "sum",
+    transform: Any = "identity",
+    executor: str = "device",
+    axes: Optional[Sequence[str]] = None,
+    p: Optional[int] = None,
+    **transform_kwargs,
+) -> CollectivePlan:
+    return CollectivePlan(
+        schedule=schedule,
+        op=op,
+        transform=transform,
+        executor=executor,
+        axes=tuple(axes) if axes is not None else None,
+        p=p,
+        transform_kwargs=tuple(sorted(transform_kwargs.items())),
+    )
+
+
+def reduce_scatter_plan(
+    *,
+    op: Any = "sum",
+    transform: Any = "identity",
+    executor: str = "device",
+    axes: Optional[Sequence[str]] = None,
+    p: Optional[int] = None,
+    **transform_kwargs,
+) -> CollectivePlan:
+    """Chained recursive-halving reduce-scatter over ``axes`` (in order)."""
+    n = len(axes) if axes is not None else 1
+    return CollectivePlan(
+        schedule="reduce_scatter",
+        op=op,
+        transform=transform,
+        executor=executor,
+        axes=tuple(axes) if axes is not None else None,
+        p=p,
+        phases=tuple(Phase("reduce_scatter", i) for i in range(n)),
+        transform_kwargs=tuple(sorted(transform_kwargs.items())),
+    )
+
+
+def allgather_plan(
+    *,
+    executor: str = "device",
+    axes: Optional[Sequence[str]] = None,
+    p: Optional[int] = None,
+) -> CollectivePlan:
+    """Chained recursive-doubling all-gather (reverse axis order, the inverse
+    of :func:`reduce_scatter_plan`)."""
+    n = len(axes) if axes is not None else 1
+    return CollectivePlan(
+        schedule="allgather",
+        executor=executor,
+        axes=tuple(axes) if axes is not None else None,
+        p=p,
+        phases=tuple(Phase("allgather", i) for i in reversed(range(n))),
+    )
+
+
+def tree_allreduce(
+    tree,
+    *,
+    schedule: str = "mrd",
+    op: Any = "sum",
+    transform: Any = "identity",
+    executor: str = "device",
+    axes: Sequence[str] = (),
+    **transform_kwargs,
+):
+    """Allreduce a pytree as one flat padded vector (flat-bucket), chained
+    over ``axes``.  ``rabenseifner`` is the default-worthy choice for
+    bandwidth-bound payloads like gradients; ``mrd`` for latency-bound."""
+    plan = allreduce_plan(
+        schedule=schedule,
+        op=op,
+        transform=transform,
+        executor=executor,
+        axes=axes,
+        **transform_kwargs,
+    )
+    vec, unravel = ravel_pytree(tree)
+    pad = (-vec.shape[0]) % plan.pad_quantum()
+    out = plan.run(jnp.pad(vec, (0, pad)))
+    return unravel(out[: vec.shape[0]])

@@ -1,0 +1,108 @@
+"""JAX version compatibility shims.
+
+The repo targets current JAX (``jax.shard_map``, ``jax.lax.axis_size``,
+``jax.make_mesh(axis_types=...)``) but must also run on older 0.4.x
+installs where those live under ``jax.experimental`` or don't exist.
+Everything that touches the manual-collective surface goes through this
+module so the rest of the codebase is version-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Iterable, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis inside a manual region.
+
+    ``jax.lax.psum`` of a Python constant folds to a static int on every
+    JAX version, so this works where ``jax.lax.axis_size`` is missing.
+    Accepts a tuple of names (returns the product).
+    """
+    if isinstance(axis_name, (tuple, list)):
+        out = 1
+        for a in axis_name:
+            out *= axis_size(a)
+        return out
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(
+    f,
+    *,
+    mesh: Mesh,
+    in_specs,
+    out_specs,
+    axis_names: Optional[Iterable[str]] = None,
+    check_vma: bool = False,
+):
+    """``jax.shard_map`` when available, else the experimental one.
+
+    ``axis_names`` selects the *manual* axes (new-API semantics); on the
+    experimental API the complement becomes ``auto=``.  ``check_vma``
+    maps to ``check_rep`` on old versions.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma, **kw,
+        )
+    from jax.experimental.shard_map import shard_map as _sm
+
+    # Old JAX: partial-manual (auto=) lowering hits unsupported PartitionId
+    # ops on CPU, so run fully manual.  Axes outside ``axis_names`` then see
+    # replicated data instead of auto-sharded data — correct (sharding
+    # constraints inside the body degrade to no-ops), just less parallel.
+    return _sm(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def partial_manual_shard_map() -> bool:
+    """True when shard_map supports auto (non-manual) axes alongside manual
+    ones (``jax.shard_map`` era).  The experimental fallback runs fully
+    manual instead."""
+    return hasattr(jax, "shard_map")
+
+
+def make_mesh(
+    shape: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Optional[Sequence[Any]] = None,
+    axis_types: Any = None,
+) -> Mesh:
+    """Build a Mesh portably.  ``axis_types`` (AxisType.Auto/...) is applied
+    only on JAX versions that have it; older versions ignore it (the
+    auto/manual split is then carried by :func:`shard_map`'s axis_names)."""
+    if devices is None:
+        n = int(np.prod(shape))
+        devices = jax.devices()[:n]
+    arr = np.asarray(devices, dtype=object).reshape(tuple(shape))
+    if axis_types is not None and hasattr(jax.sharding, "AxisType"):
+        return Mesh(arr, tuple(axis_names), axis_types=axis_types)
+    return Mesh(arr, tuple(axis_names))
+
+
+def default_axis_types(n: int):
+    """(AxisType.Auto,) * n on new JAX, None on old."""
+    if hasattr(jax.sharding, "AxisType"):
+        return (jax.sharding.AxisType.Auto,) * n
+    return None
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` or identity where VMA tracking doesn't exist."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_names)
+    return x

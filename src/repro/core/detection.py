@@ -3,9 +3,13 @@
 
 The solver-level detectors are tick-wise state machines driven by
 ``repro.core.async_engine`` over the **sim** executor.  The training-level
-``ConvergenceMonitor`` runs the same non-blocking MRD reduction over a mesh
-axis (the **device** executor) and is advanced one stage per train step —
-the paper's statechart embedded in a production training loop.
+``ConvergenceMonitor`` runs the same non-blocking MRD reduction over one or
+more mesh axes (the **device** executor) and is advanced one stage per train
+step — the paper's statechart embedded in a production training loop.
+
+Everything here drives :class:`repro.collectives.plans.CollectivePlan`
+(``init``/``step``), so detection uses the exact same stage interpreter as
+the gradient collectives.
 """
 
 from __future__ import annotations
@@ -16,10 +20,16 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import nonblocking, snapshot
+from repro import compat
+from repro.collectives import plans
+from repro.core import snapshot
 from repro.core.solvers import FixedPoint
 
 _BIG = 1e30  # finite 'infinity' for residual latches
+
+
+def _sim_plan(p: int) -> plans.CollectivePlan:
+    return plans.allreduce_plan(schedule="mrd", p=p, op="max")
 
 
 # ---------------------------------------------------------------------------
@@ -29,7 +39,7 @@ _BIG = 1e30  # finite 'infinity' for residual latches
 
 def inexact_init(p: int) -> dict[str, Any]:
     return {
-        "nb": nonblocking.init(jnp.full((p,), _BIG, jnp.float32)),
+        "nb": _sim_plan(p).init(jnp.full((p,), _BIG, jnp.float32)),
         "res_loc": jnp.full((p,), _BIG, jnp.float32),
         "res_norm": jnp.full((), _BIG, jnp.float32),
         "detected": jnp.zeros((), jnp.bool_),
@@ -45,7 +55,7 @@ def inexact_tick(det, update_mag, *, p: int, eps: float):
     worker reads res_glb into res_norm and re-latches res_loc from its current
     local residual.  Inexact: contributions mix different local iterations.
     """
-    nb = nonblocking.step(det["nb"], det["res_loc"], p=p, op="max")
+    nb = _sim_plan(p).step(det["nb"], det["res_loc"])
     flag = nb["flag"]
     res_norm = jnp.where(flag, jnp.max(nb["result"]), det["res_norm"])
     res_loc = jnp.where(flag, update_mag, det["res_loc"])
@@ -61,7 +71,7 @@ def inexact_tick(det, update_mag, *, p: int, eps: float):
 def exact_init(p: int, m: int) -> dict[str, Any]:
     return {
         "snap": snapshot.init(p, m),
-        "nb": nonblocking.init(jnp.full((p,), _BIG, jnp.float32)),
+        "nb": _sim_plan(p).init(jnp.full((p,), _BIG, jnp.float32)),
         "res_loc": jnp.full((p,), _BIG, jnp.float32),
         "res_norm": jnp.full((), _BIG, jnp.float32),
         "mode": jnp.zeros((), jnp.int32),  # 0 = snapshot (sflag), 1 = reduce
@@ -102,7 +112,7 @@ def exact_tick(det, x_blocks, *, fp: FixedPoint, now, key, max_delay: int, eps: 
         }
 
     def reduce_phase(d):
-        nb = nonblocking.step(d["nb"], d["res_loc"], p=p, op="max")
+        nb = _sim_plan(p).step(d["nb"], d["res_loc"])
         flag = nb["flag"]
         res_norm = jnp.where(flag, jnp.max(nb["result"]), d["res_norm"])
         det_now = flag & (res_norm < eps)
@@ -125,7 +135,7 @@ def exact_tick(det, x_blocks, *, fp: FixedPoint, now, key, max_delay: int, eps: 
 
 @dataclasses.dataclass(frozen=True)
 class ConvergenceMonitor:
-    """Paper's detection embedded in a training step, over the DP mesh axis.
+    """Paper's detection embedded in a training step, over the DP mesh axes.
 
     ``mode='inexact'``: each cycle latches the worker's *current* metric (e.g.
     local grad-norm or loss delta); the certified global value lags by
@@ -137,6 +147,11 @@ class ConvergenceMonitor:
     from the *same* global step (a consistent cut — the BSP analogue of the
     snapshot), so the certified value is exact for that step.
 
+    ``axis_name`` may be a single mesh axis or a tuple (e.g. a multi-pod
+    ``("pod", "data")`` DP domain): the underlying plan chains the per-axis
+    MRD schedules into one stage list, so detection over a product of axes
+    costs one scalar ppermute per step exactly like the single-axis case.
+
     Use inside shard_map/jit: ``state, done, value = monitor.step(state, metric,
     step_idx)``.
     """
@@ -146,6 +161,14 @@ class ConvergenceMonitor:
     mode: str = "inexact"  # 'inexact' | 'exact'
     op: str = "max"
 
+    def _axes(self) -> tuple[str, ...]:
+        if isinstance(self.axis_name, str):
+            return (self.axis_name,)
+        return tuple(self.axis_name)
+
+    def _plan(self) -> plans.CollectivePlan:
+        return plans.allreduce_plan(schedule="mrd", axes=self._axes(), op=self.op)
+
     def init(self, varying: bool = True) -> dict[str, Any]:
         """``varying=True`` when called *inside* a shard_map region with VMA
         checking on (marks state as varying over the manual axes so it can be
@@ -154,29 +177,25 @@ class ConvergenceMonitor:
         state)."""
         metric0 = jnp.full((), _BIG, jnp.float32)
         state = {
-            "nb": nonblocking.init(metric0),
+            "nb": plans.allreduce_plan(schedule="mrd", p=1).init(metric0),
             "latched": metric0,
             "value": metric0,
             "done": jnp.zeros((), jnp.bool_),
         }
         if not varying:
             return state
-        axes = (
-            (self.axis_name,) if isinstance(self.axis_name, str) else tuple(self.axis_name)
-        )
-        return jax.tree.map(lambda x: jax.lax.pvary(x, axes), state)
+        return jax.tree.map(lambda x: compat.pvary(x, self._axes()), state)
 
     def step(self, state, local_metric, step_idx):
         local_metric = local_metric.astype(jnp.float32)
+        plan = self._plan()
         if self.mode == "exact":
-            clen = nonblocking.cycle_length(jax.lax.axis_size(self.axis_name))
+            clen = plan.cycle_length()
             latch_now = (step_idx % clen) == 0
             latched = jnp.where(latch_now, local_metric, state["latched"])
         else:
             latched = local_metric
-        nb = nonblocking.step(
-            state["nb"], latched, axis_name=self.axis_name, op=self.op
-        )
+        nb = plan.step(state["nb"], latched)
         value = jnp.where(nb["flag"], nb["result"], state["value"])
         done = state["done"] | (nb["flag"] & (value < self.threshold))
         return (

@@ -1,33 +1,34 @@
-"""Modified recursive doubling collectives: device and simulation executors.
+"""Deprecated shim: MRD executors moved into the layered collectives
+subsystem (``repro.collectives``).  Every public name keeps working, but
+each function is now a thin wrapper over a :class:`CollectivePlan`, so
+blocking/non-blocking, compressed/plain, device/sim all execute through
+the single validated stage interpreter (``repro.collectives.plans``).
 
-One schedule (``repro.core.topology``), two executors:
+New code should build plans directly::
 
-- **device**: runs inside ``jax.shard_map`` using ``jax.lax.ppermute``
-  (collective-permute, the native TPU ICI primitive).  SPMD: every rank runs
-  the same program; shift stages are masked by rank predicates.
-- **sim**: pure ``jnp`` over a stacked leading rank axis ``[p, ...]``.  Runs on
-  a single CPU device, so correctness of the schedule math is exhaustively
-  testable for any ``p`` (including non-powers-of-two, the paper's case)
-  without multi-device hardware.
-
-Both executors share the same stage-interpretation code via a tiny backend
-shim, so the compiled collective is, by construction, the validated math.
-
-Ops follow the paper (S2): summation, maximization, minimization.
+    from repro.collectives import allreduce_plan, reduce_scatter_plan
+    plan = allreduce_plan(schedule="mrd", axes=("data",), op="sum")
+    out = plan.run(tree)                       # inside shard_map
+    rs = reduce_scatter_plan(axes=("data",), transform="int8").run(vec)
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.flatten_util import ravel_pytree
 
-from repro.core import topology
-from repro.core.topology import (
+from repro import compat
+from repro.collectives import plans
+from repro.collectives.executors import (  # noqa: F401
+    OPS,
+    DeviceBackend,
+    SimBackend,
+    resolve_op as _resolve_op,
+)
+from repro.collectives.plans import exec_stage
+from repro.collectives.schedules import (  # noqa: F401
     Stage,
     allgather_schedule,
     allreduce_schedule,
@@ -36,143 +37,10 @@ from repro.core.topology import (
     reduce_scatter_schedule,
 )
 
-OPS: dict[str, Callable[[Any, Any], Any]] = {
-    "sum": jnp.add,
-    "max": jnp.maximum,
-    "min": jnp.minimum,
-}
-
-
-def _resolve_op(op: str | Callable) -> Callable:
-    if callable(op):
-        return op
-    try:
-        return OPS[op]
-    except KeyError:
-        raise ValueError(f"unknown reduction op {op!r}; known: {sorted(OPS)}")
-
-
-# ---------------------------------------------------------------------------
-# Backends
-# ---------------------------------------------------------------------------
-
-
-class DeviceBackend:
-    """Executes stages with ppermute over a named mesh axis (inside shard_map)."""
-
-    def __init__(self, axis_name: str):
-        self.axis = axis_name
-
-    def rank(self):
-        return jax.lax.axis_index(self.axis)
-
-    def permute(self, x, pairs):
-        if not pairs:
-            return jnp.zeros_like(x)
-        return jax.lax.ppermute(x, self.axis, pairs)
-
-    def where(self, mask, a, b):
-        return jnp.where(mask, a, b)
-
-    # value-dimension helpers (device arrays carry no rank axis)
-    def split_half(self, x):
-        n = x.shape[0]
-        return x[: n // 2], x[n // 2 :]
-
-    def concat(self, a, b):
-        return jnp.concatenate([a, b], axis=0)
-
-
-class SimBackend:
-    """Executes stages on stacked arrays [p, ...] on a single device."""
-
-    def __init__(self, p: int):
-        self.p = p
-
-    def rank(self):
-        return jnp.arange(self.p)
-
-    def permute(self, x, pairs):
-        idx = np.zeros(self.p, dtype=np.int32)
-        has = np.zeros(self.p, dtype=bool)
-        for s, d in pairs:
-            idx[d] = s
-            has[d] = True
-        recv = jnp.take(x, jnp.asarray(idx), axis=0)
-        mask = jnp.asarray(has).reshape((self.p,) + (1,) * (x.ndim - 1))
-        return jnp.where(mask, recv, jnp.zeros_like(recv))
-
-    def where(self, mask, a, b):
-        mask = jnp.asarray(mask)
-        nd = max(getattr(a, "ndim", 0), getattr(b, "ndim", 0))
-        mask = mask.reshape(mask.shape + (1,) * (nd - mask.ndim))
-        return jnp.where(mask, a, b)
-
-    def split_half(self, x):
-        n = x.shape[1]
-        return x[:, : n // 2], x[:, n // 2 :]
-
-    def concat(self, a, b):
-        return jnp.concatenate([a, b], axis=1)
-
-
-# ---------------------------------------------------------------------------
-# Stage interpreters (shared by both backends)
-# ---------------------------------------------------------------------------
-
 
 def _exec_allreduce_stage(x, st: Stage, be, p: int, op: Callable):
-    p0, _, extra = pivot(p)
-    r = be.rank()
-    recv = be.permute(x, st.pairs)
-    if st.kind == "bshift":
-        return be.where(r < extra, op(x, recv), x)
-    if st.kind == "butterfly":
-        return be.where(r < p0, op(x, recv), x)
-    if st.kind == "fshift":
-        return be.where(r >= p0, recv, x)
-    raise ValueError(f"bad allreduce stage kind {st.kind}")
-
-
-def _exec_allreduce(x, be, p: int, op: Callable):
-    for st in allreduce_schedule(p):
-        x = _exec_allreduce_stage(x, st, be, p, op)
-    return x
-
-
-def _exec_reduce_scatter(x, be, p: int, op: Callable):
-    """x: full vector (len divisible by p0). Returns rank's segment (len/p0),
-    natural order; junk on extra ranks (>= p0)."""
-    p0, _, extra = pivot(p)
-    r = be.rank()
-    for st in reduce_scatter_schedule(p):
-        if st.kind == "bshift":
-            recv = be.permute(x, st.pairs)
-            x = be.where(r < extra, op(x, recv), x)
-        else:  # 'rs'
-            d = st.distance
-            lower, upper = be.split_half(x)
-            my_bit = (r & d) != 0
-            to_send = be.where(my_bit, lower, upper)
-            recv = be.permute(to_send, st.pairs)
-            keep = be.where(my_bit, upper, lower)
-            x = be.where(r < p0, op(keep, recv), keep)
-    return x
-
-
-def _exec_allgather(x, be, p: int):
-    """x: rank's segment (ranks >= p0 carry junk). Returns the full vector on
-    every rank."""
-    p0, _, _ = pivot(p)
-    r = be.rank()
-    for st in allgather_schedule(p):
-        recv = be.permute(x, st.pairs)
-        if st.kind == "ag":
-            my_bit = (r & st.distance) != 0
-            x = be.where(my_bit, be.concat(recv, x), be.concat(x, recv))
-        else:  # fshift
-            x = be.where(r >= p0, recv, x)
-    return x
+    """Back-compat alias for the plan layer's stage interpreter."""
+    return exec_stage(x, st, be, p, op)
 
 
 # ---------------------------------------------------------------------------
@@ -181,7 +49,7 @@ def _exec_allgather(x, be, p: int):
 
 
 def axis_size(axis_name: str) -> int:
-    return jax.lax.axis_size(axis_name)
+    return compat.axis_size(axis_name)
 
 
 def allreduce(tree, axis_name: str, *, op: str | Callable = "sum"):
@@ -189,12 +57,7 @@ def allreduce(tree, axis_name: str, *, op: str | Callable = "sum"):
 
     Latency-optimal: log2(p0)+2 stages, full payload each stage.
     """
-    p = axis_size(axis_name)
-    if p == 1:
-        return tree
-    be = DeviceBackend(axis_name)
-    fn = functools.partial(_exec_allreduce, be=be, p=p, op=_resolve_op(op))
-    return jax.tree.map(fn, tree)
+    return plans.allreduce_plan(schedule="mrd", axes=(axis_name,), op=op).run(tree)
 
 
 def reduce_scatter(vec, axis_name: str, *, op: str | Callable = "sum"):
@@ -206,7 +69,7 @@ def reduce_scatter(vec, axis_name: str, *, op: str | Callable = "sum"):
     p0, _, _ = pivot(p)
     if vec.ndim != 1 or vec.shape[0] % p0:
         raise ValueError(f"need 1-D vec with len % {p0} == 0, got {vec.shape}")
-    return _exec_reduce_scatter(vec, DeviceBackend(axis_name), p, _resolve_op(op))
+    return plans.reduce_scatter_plan(axes=(axis_name,), op=op).run(vec)
 
 
 def compressed_reduce_scatter(vec, axis_name: str, *, block: int = 256):
@@ -215,50 +78,32 @@ def compressed_reduce_scatter(vec, axis_name: str, *, block: int = 256):
     Each recursive-halving stage quantizes the outgoing half blockwise and
     dequant-accumulates on receive (the ``mrd_combine`` kernel's op).  Wire
     bytes drop ~4x vs fp32.  Quantization noise is bounded per stage
-    (|err| <= amax/254 per block); the grad-sync layer adds error feedback.
+    (|err| <= amax/254 per block) but uncompensated (no error feedback yet).
     """
-    from repro.collectives import compression as C
-
     p = axis_size(axis_name)
     if p == 1:
         return vec
-    p0, _, extra = pivot(p)
+    p0, _, _ = pivot(p)
     if vec.ndim != 1 or vec.shape[0] % (p0 * block):
         raise ValueError(f"need len % {p0 * block} == 0, got {vec.shape}")
-    be = DeviceBackend(axis_name)
-    r = be.rank()
-    x = vec
-    for st in reduce_scatter_schedule(p):
-        if st.kind == "bshift":
-            q, s = C.quantize(x, block)
-            qr = be.permute(q, st.pairs)
-            sr = be.permute(s, st.pairs)
-            x = be.where(r < extra, x + C.dequantize(qr, sr, block), x)
-        else:
-            d = st.distance
-            lower, upper = be.split_half(x)
-            my_bit = (r & d) != 0
-            to_send = be.where(my_bit, lower, upper)
-            q, s = C.quantize(to_send, block)
-            qr = be.permute(q, st.pairs)
-            sr = be.permute(s, st.pairs)
-            keep = be.where(my_bit, upper, lower)
-            x = be.where(r < p0, keep + C.dequantize(qr, sr, block), keep)
-    return x
+    return plans.reduce_scatter_plan(
+        axes=(axis_name,), transform="int8", block=block
+    ).run(vec)
 
 
 def allgather(seg, axis_name: str):
     """Recursive-doubling all-gather of each pivot rank's 1-D segment."""
-    p = axis_size(axis_name)
-    if p == 1:
+    if axis_size(axis_name) == 1:
         return seg
-    return _exec_allgather(seg, DeviceBackend(axis_name), p)
+    return plans.allgather_plan(axes=(axis_name,)).run(seg)
 
 
 def rabenseifner_allreduce(vec, axis_name: str, *, op: str | Callable = "sum"):
     """Bandwidth-optimal allreduce (beyond-paper; paper ref. [20]):
     reduce-scatter + all-gather, ~2n per rank instead of n*log2(p0)."""
-    return allgather(reduce_scatter(vec, axis_name, op=op), axis_name)
+    return plans.allreduce_plan(
+        schedule="rabenseifner", axes=(axis_name,), op=op
+    ).run(vec)
 
 
 def hierarchical_allreduce(
@@ -269,9 +114,9 @@ def hierarchical_allreduce(
     1/p0_inner-size shard, then all-gather within ``inner_axis``.
 
     Inter-pod traffic drops from n*log2(pods) to (n/p0_inner)*log2(pods)."""
-    seg = reduce_scatter(vec, inner_axis, op=op)
-    seg = allreduce(seg, outer_axis, op=op)
-    return allgather(seg, inner_axis)
+    return plans.allreduce_plan(
+        schedule="hierarchical", axes=(inner_axis, outer_axis), op=op
+    ).run(vec)
 
 
 def tree_allreduce_flat(
@@ -283,23 +128,13 @@ def tree_allreduce_flat(
 ):
     """Allreduce a pytree as one flat padded vector (flat-bucket).
 
-    ``schedule``: 'mrd' (paper), 'rabenseifner' (beyond-paper, default for
-    bandwidth-bound payloads like gradients).
+    ``schedule``: any registered schedule name; 'mrd' (paper),
+    'rabenseifner' (beyond-paper, default for bandwidth-bound payloads
+    like gradients).
     """
-    p = axis_size(axis_name)
-    if p == 1:
+    if axis_size(axis_name) == 1:
         return tree
-    vec, unravel = ravel_pytree(tree)
-    p0, _, _ = pivot(p)
-    pad = (-vec.shape[0]) % p0
-    padded = jnp.pad(vec, (0, pad))
-    if schedule == "mrd":
-        out = _exec_allreduce(padded, DeviceBackend(axis_name), p, _resolve_op(op))
-    elif schedule == "rabenseifner":
-        out = rabenseifner_allreduce(padded, axis_name, op=op)
-    else:
-        raise ValueError(f"unknown schedule {schedule!r}")
-    return unravel(out[: vec.shape[0]])
+    return plans.tree_allreduce(tree, schedule=schedule, op=op, axes=(axis_name,))
 
 
 # ---------------------------------------------------------------------------
@@ -312,7 +147,7 @@ def sim_allreduce(x, *, op: str | Callable = "sum"):
     p = x.shape[0]
     if p == 1:
         return x
-    return _exec_allreduce(x, SimBackend(p), p, _resolve_op(op))
+    return plans.allreduce_plan(schedule="mrd", p=p, op=op).run(x)
 
 
 def sim_reduce_scatter(x, *, op: str | Callable = "sum"):
@@ -323,7 +158,7 @@ def sim_reduce_scatter(x, *, op: str | Callable = "sum"):
     p0, _, _ = pivot(p)
     if x.shape[1] % p0:
         raise ValueError(f"n={x.shape[1]} not divisible by p0={p0}")
-    return _exec_reduce_scatter(x, SimBackend(p), p, _resolve_op(op))
+    return plans.reduce_scatter_plan(p=p, op=op).run(x)
 
 
 def sim_allgather(x):
@@ -331,11 +166,14 @@ def sim_allgather(x):
     p = x.shape[0]
     if p == 1:
         return x
-    return _exec_allgather(x, SimBackend(p), p)
+    return plans.allgather_plan(p=p).run(x)
 
 
 def sim_rabenseifner_allreduce(x, *, op: str | Callable = "sum"):
-    return sim_allgather(sim_reduce_scatter(x, op=op))
+    p = x.shape[0]
+    if p == 1:
+        return x
+    return plans.allreduce_plan(schedule="rabenseifner", p=p, op=op).run(x)
 
 
 # ---------------------------------------------------------------------------
@@ -353,20 +191,23 @@ def make_allreduce(mesh, axis_name: str, *, op: str = "sum", schedule: str = "mr
     def fn(x):
         def local(v):
             y = v[0]
-            if schedule == "mrd":
-                out = allreduce(y, axis_name, op=op)
-            elif schedule == "rabenseifner":
-                flat = y.reshape(-1)
-                p0, _, _ = pivot(mesh.shape[axis_name])
-                pad = (-flat.shape[0]) % p0
-                out = rabenseifner_allreduce(jnp.pad(flat, (0, pad)), axis_name, op=op)
-                out = out[: flat.shape[0]].reshape(y.shape)
-            elif schedule == "psum":
+            if schedule == "psum":
                 out = jax.lax.psum(y, axis_name)
+            elif schedule == "mrd":
+                out = allreduce(y, axis_name, op=op)
             else:
-                raise ValueError(schedule)
+                plan = plans.allreduce_plan(
+                    schedule=schedule, axes=(axis_name,), op=op
+                )
+                flat = y.reshape(-1)
+                pad = (-flat.shape[0]) % plan.pad_quantum()
+                out = plan.run(jnp.pad(flat, (0, pad)))
+                out = out[: flat.shape[0]].reshape(y.shape)
             return out[None]
 
-        return jax.shard_map(local, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+        return compat.shard_map(
+            local, mesh=mesh, in_specs=spec, out_specs=spec,
+            axis_names={axis_name}, check_vma=False,
+        )(x)
 
     return jax.jit(fn)

@@ -1,61 +1,48 @@
 """Non-blocking MRD Allreduce as a state machine (paper Fig. 4).
 
-The paper rejects thread-based non-blocking collectives in favor of a
-*state-based interface invoked repeatedly from the application loop*.  This is
-its exact JAX analogue: the collective's stage list becomes a ``lax.switch``
-over a stage counter carried in a pytree.  Each call to :func:`step` advances
-**one** communication stage; a cycle completes after ``log2(p0)+2`` calls
-(``log2(p0)`` for power-of-two ``p``), sets ``flag`` (paper's ``flag``/
-``eflag``), publishes the reduced value, and re-latches the caller's current
-local contribution to begin the next cycle — "each cycle begins with the
-backward shift".
+Deprecated shim: the state machine now lives on
+:class:`repro.collectives.plans.CollectivePlan` (``init``/``step``), so
+the staged collective and the blocking one are literally the same stage
+interpreter.  This module keeps the original functional API:
 
-Works under both executors:
 - device: call :func:`step` inside ``shard_map`` with ``axis_name=...``
   (state leaves are per-rank, stage counter is replicated-in-lockstep);
+  ``axis_name`` may be a *tuple* of mesh axes — the plan chains the
+  per-axis schedules into one stage list;
 - sim: call with ``p=...`` on stacked ``[p, ...]`` arrays (used by the
   asynchronous-iteration engine and exhaustive CPU tests).
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
-import jax
-import jax.numpy as jnp
+from repro.collectives import plans
+from repro.collectives.schedules import allreduce_schedule
 
-from repro.core import mrd
-from repro.core.mrd import DeviceBackend, SimBackend, _exec_allreduce_stage, _resolve_op
-from repro.core.topology import allreduce_schedule
+
+def _make_plan(axis_name, p, op) -> plans.CollectivePlan:
+    if (axis_name is None) == (p is None):
+        raise ValueError("pass exactly one of axis_name= (device) or p= (sim)")
+    if axis_name is not None:
+        axes = (axis_name,) if isinstance(axis_name, str) else tuple(axis_name)
+        return plans.allreduce_plan(schedule="mrd", axes=axes, op=op)
+    return plans.allreduce_plan(schedule="mrd", p=p, op=op)
 
 
 def init(value) -> dict[str, Any]:
     """Create the state machine's state, latching ``value`` as the first
     cycle's contribution.  ``value``: per-rank array (device) or [p, ...]
     stacked (sim)."""
-    return {
-        "stage": jnp.zeros((), jnp.int32),
-        "buf": value,
-        "result": jax.tree.map(jnp.zeros_like, value),
-        "flag": jnp.zeros((), jnp.bool_),  # True for exactly the completing call
-        "cycles": jnp.zeros((), jnp.int32),
-    }
-
-
-def _make_backend(axis_name: str | None, p: int | None):
-    if (axis_name is None) == (p is None):
-        raise ValueError("pass exactly one of axis_name= (device) or p= (sim)")
-    if axis_name is not None:
-        return DeviceBackend(axis_name), jax.lax.axis_size(axis_name)
-    return SimBackend(p), p
+    # state layout is plan-independent; use a sim plan to build it
+    return plans.allreduce_plan(schedule="mrd", p=1).init(value)
 
 
 def step(
     state: dict[str, Any],
     local_value,
     *,
-    axis_name: str | None = None,
+    axis_name: Any | None = None,
     p: int | None = None,
     op: str | Callable = "max",
 ) -> dict[str, Any]:
@@ -66,47 +53,7 @@ def step(
     at that cycle's start.  ``local_value`` is latched only when a new cycle
     begins (stage == 0), matching the paper's statechart.
     """
-    be, psize = _make_backend(axis_name, p)
-    opf = _resolve_op(op)
-    sched = allreduce_schedule(psize)
-    nstages = len(sched)
-
-    if nstages == 0:  # p == 1: every call is a complete cycle
-        return {
-            "stage": state["stage"],
-            "buf": local_value,
-            "result": local_value,
-            "flag": jnp.ones((), jnp.bool_),
-            "cycles": state["cycles"] + 1,
-        }
-
-    starting = state["stage"] == 0
-    buf = jax.tree.map(
-        lambda lv, b: jnp.where(starting, lv, b), local_value, state["buf"]
-    )
-
-    def _stage_fn(st):
-        def apply(b):
-            return jax.tree.map(
-                lambda leaf: _exec_allreduce_stage(leaf, st=st, be=be, p=psize, op=opf),
-                b,
-            )
-
-        return apply
-
-    buf = jax.lax.switch(state["stage"], [_stage_fn(st) for st in sched], buf)
-
-    nxt = state["stage"] + 1
-    done = nxt == nstages
-    return {
-        "stage": jnp.where(done, 0, nxt),
-        "buf": buf,
-        "result": jax.tree.map(
-            lambda b, r: jnp.where(done, b, r), buf, state["result"]
-        ),
-        "flag": done,
-        "cycles": state["cycles"] + done.astype(jnp.int32),
-    }
+    return _make_plan(axis_name, p, op).step(state, local_value)
 
 
 def cycle_length(p: int) -> int:
@@ -116,7 +63,4 @@ def cycle_length(p: int) -> int:
 
 def run_blocking(value, *, axis_name=None, p=None, op="max"):
     """Drive the state machine to one full cycle (for tests/reference)."""
-    st = init(value)
-    for _ in range(cycle_length(p if p is not None else jax.lax.axis_size(axis_name))):
-        st = step(st, value, axis_name=axis_name, p=p, op=op)
-    return st["result"]
+    return _make_plan(axis_name, p, op).run_blocking(value)

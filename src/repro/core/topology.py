@@ -1,240 +1,32 @@
-"""Communication schedules for modified recursive doubling (MRD) collectives.
+"""Deprecated shim: schedules moved to ``repro.collectives.schedules``
+(layer 1 of the collectives subsystem).  All public names re-export; new
+code should import from ``repro.collectives``."""
 
-This module is the *mathematical* heart of the paper: it builds, for an
-arbitrary number of ranks ``p``, the static stage list of the modified
-recursive doubling Allreduce (backward shift -> XOR butterfly -> forward
-shift), plus the recursive-halving reduce-scatter and recursive-doubling
-all-gather used by the beyond-paper Rabenseifner/ZeRO-1 paths.
-
-Schedules are pure data (rank pairs + stage kinds).  Two executors consume
-them (``repro.core.mrd``): a ``shard_map``+``ppermute`` device executor and a
-stacked-axis pure-``jnp`` simulation executor.  Message/step accounting for
-the paper's cost claims lives here so benchmarks and tests read from the same
-source of truth as the executors.
-"""
-
-from __future__ import annotations
-
-import dataclasses
-import math
-from typing import Literal, Sequence
-
-StageKind = Literal["bshift", "butterfly", "rs", "ag", "fshift"]
-
-
-@dataclasses.dataclass(frozen=True)
-class Stage:
-    """One communication stage: a static list of (src, dst) rank pairs.
-
-    ``kind`` controls the combine rule applied by executors:
-      - ``bshift``:    dst (< extra) does ``x = op(x, recv)``
-      - ``butterfly``: ranks < p0 do ``x = op(x, recv)`` (full-buffer exchange)
-      - ``rs``:        recursive-halving exchange (half-buffer, keep+reduce)
-      - ``ag``:        recursive-doubling gather (buffer doubles)
-      - ``fshift``:    dst (>= p0) does ``x = recv``
-    """
-
-    kind: StageKind
-    pairs: tuple[tuple[int, int], ...]
-    distance: int = 0  # butterfly/rs/ag partner distance, 0 for shifts
-    # Fraction of the full buffer each message carries at this stage
-    # (1.0 for allreduce stages; 2^-(s+1) for rs; mirrored for ag).
-    payload_fraction: float = 1.0
-
-
-def pivot(p: int) -> tuple[int, int, int]:
-    """Return (p0, mu0, extra) with p0 = 2^mu0 <= p < 2^(mu0+1)."""
-    if p < 1:
-        raise ValueError(f"need p >= 1, got {p}")
-    mu0 = p.bit_length() - 1
-    p0 = 1 << mu0
-    return p0, mu0, p - p0
-
-
-def is_power_of_two(p: int) -> bool:
-    return p >= 1 and (p & (p - 1)) == 0
-
-
-def backward_shift_stage(p: int) -> Stage:
-    p0, _, _ = pivot(p)
-    return Stage("bshift", tuple((r, r - p0) for r in range(p0, p)))
-
-
-def forward_shift_stage(p: int) -> Stage:
-    p0, _, extra = pivot(p)
-    return Stage("fshift", tuple((r, r + p0) for r in range(extra)))
-
-
-def allreduce_schedule(p: int) -> list[Stage]:
-    """The paper's modified recursive doubling Allreduce.
-
-    backward shift (if p != p0) -> mu0 XOR-butterfly stages -> forward shift.
-    Exactly ``log2(p0) + 2`` stages in the general case and ``log2(p0)`` when
-    ``p`` is a power of two (the shifts are skipped, paper S4).
-    """
-    p0, mu0, extra = pivot(p)
-    stages: list[Stage] = []
-    if extra:
-        stages.append(backward_shift_stage(p))
-    for s in range(mu0):
-        d = 1 << s
-        stages.append(
-            Stage("butterfly", tuple((i, i ^ d) for i in range(p0)), distance=d)
-        )
-    if extra:
-        stages.append(forward_shift_stage(p))
-    return stages
-
-
-def reduce_scatter_schedule(p: int) -> list[Stage]:
-    """Recursive-halving reduce-scatter over the p0 pivot ranks.
-
-    After the backward shift, stage s exchanges buffer halves with the partner
-    at distance ``p0 >> (s+1)`` (large -> small).  Rank r (< p0) ends holding
-    segment r (natural order) of the reduced vector.  Extra ranks carry dummy
-    buffers (masked by executors).
-    """
-    p0, mu0, extra = pivot(p)
-    stages: list[Stage] = []
-    if extra:
-        stages.append(backward_shift_stage(p))
-    for s in range(mu0):
-        d = p0 >> (s + 1)
-        stages.append(
-            Stage(
-                "rs",
-                tuple((i, i ^ d) for i in range(p0)),
-                distance=d,
-                payload_fraction=0.5 ** (s + 1),
-            )
-        )
-    return stages
-
-
-def allgather_schedule(p: int) -> list[Stage]:
-    """Recursive-doubling all-gather (inverse of reduce_scatter_schedule).
-
-    Stage s exchanges the current buffer with the partner at distance
-    ``p0 >> (mu0 - s)`` (small -> large); buffers double each stage.  A
-    forward shift delivers the full vector to the extra ranks.
-    """
-    p0, mu0, extra = pivot(p)
-    stages: list[Stage] = []
-    for s in range(mu0):
-        d = 1 << s
-        stages.append(
-            Stage(
-                "ag",
-                tuple((i, i ^ d) for i in range(p0)),
-                distance=d,
-                payload_fraction=0.5 ** (mu0 - s),
-            )
-        )
-    if extra:
-        stages.append(forward_shift_stage(p))
-    return stages
-
-
-def rabenseifner_schedule(p: int) -> list[Stage]:
-    """Bandwidth-optimal allreduce = reduce-scatter + all-gather.
-
-    Beyond-paper (the paper's own ref. [20]): per-rank traffic is
-    ~2n(1 - 1/p0) instead of n*log2(p0); the same backward/forward shifts
-    handle the non-power-of-two case.
-    """
-    rs = reduce_scatter_schedule(p)
-    ag = allgather_schedule(p)
-    return rs + ag
-
-
-# ---------------------------------------------------------------------------
-# Cost accounting (the paper's S2 claims; benchmarks/tests read these).
-# ---------------------------------------------------------------------------
-
-
-def schedule_steps(stages: Sequence[Stage]) -> int:
-    return len(stages)
-
-
-def schedule_messages(stages: Sequence[Stage]) -> int:
-    """Total point-to-point messages in one cycle (paper: p0*log2(p0) + 2(p-p0)
-    for the MRD allreduce)."""
-    return sum(len(st.pairs) for st in stages)
-
-
-def schedule_volume(stages: Sequence[Stage], n_elements: int) -> float:
-    """Total elements moved across the network in one cycle."""
-    return sum(len(st.pairs) * st.payload_fraction * n_elements for st in stages)
-
-
-def per_rank_volume(stages: Sequence[Stage], n_elements: int, rank: int) -> float:
-    """Elements *sent* by ``rank`` over the cycle."""
-    total = 0.0
-    for st in stages:
-        for src, _ in st.pairs:
-            if src == rank:
-                total += st.payload_fraction * n_elements
-    return total
-
-
-def paper_message_count(p: int) -> int:
-    """Closed form from the paper, S2: p0*log2(p0) + 2*(p - p0)."""
-    p0, mu0, extra = pivot(p)
-    return p0 * mu0 + 2 * extra
-
-
-def paper_step_count(p: int) -> int:
-    """Closed form from the paper, S2: log2(p0) + 2 (shifts skipped if p=2^k)."""
-    _, mu0, extra = pivot(p)
-    return mu0 + (2 if extra else 0)
-
-
-# ---------------------------------------------------------------------------
-# Latency/bandwidth cost model (alpha-beta), used to compare schedules for a
-# given interconnect without running them (benchmarks/bench_mrd.py).
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class LinkModel:
-    alpha_s: float  # per-message latency (seconds)
-    beta_s_per_byte: float  # inverse bandwidth (seconds/byte)
-
-    @classmethod
-    def tpu_v5e_ici(cls) -> "LinkModel":
-        # ~50 GB/s per ICI link; ~1us collective-permute launch latency.
-        return cls(alpha_s=1e-6, beta_s_per_byte=1.0 / 50e9)
-
-    @classmethod
-    def dcn(cls) -> "LinkModel":
-        # Inter-pod data-center network: ~25 GB/s effective, ~10us latency.
-        return cls(alpha_s=10e-6, beta_s_per_byte=1.0 / 25e9)
-
-
-def schedule_time(
-    stages: Sequence[Stage], n_bytes: int, link: LinkModel
-) -> float:
-    """Alpha-beta time of one cycle: stages are sequential; within a stage all
-    pairs proceed in parallel, so a stage costs alpha + fraction*n*beta."""
-    t = 0.0
-    for st in stages:
-        if not st.pairs:
-            continue
-        t += link.alpha_s + st.payload_fraction * n_bytes * link.beta_s_per_byte
-    return t
-
-
-def ring_allreduce_time(p: int, n_bytes: int, link: LinkModel) -> float:
-    """Reference: ring allreduce = 2(p-1) steps of n/p bytes."""
-    if p == 1:
-        return 0.0
-    return 2 * (p - 1) * (link.alpha_s + (n_bytes / p) * link.beta_s_per_byte)
-
-
-def tree_allreduce_time(p: int, n_bytes: int, link: LinkModel) -> float:
-    """Reference: binomial tree reduce+bcast = 2*ceil(log2 p) full-buffer steps."""
-    if p == 1:
-        return 0.0
-    return 2 * math.ceil(math.log2(p)) * (
-        link.alpha_s + n_bytes * link.beta_s_per_byte
-    )
+from repro.collectives.schedules import (  # noqa: F401
+    LinkModel,
+    Phase,
+    PRIMITIVES,
+    SCHEDULES,
+    ScheduleFamily,
+    Stage,
+    StageKind,
+    allgather_schedule,
+    allreduce_schedule,
+    backward_shift_stage,
+    forward_shift_stage,
+    get_schedule,
+    is_power_of_two,
+    paper_message_count,
+    paper_step_count,
+    per_rank_volume,
+    pivot,
+    rabenseifner_schedule,
+    reduce_scatter_schedule,
+    register_schedule,
+    ring_allreduce_time,
+    schedule_messages,
+    schedule_steps,
+    schedule_time,
+    schedule_volume,
+    tree_allreduce_time,
+)

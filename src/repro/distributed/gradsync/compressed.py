@@ -1,0 +1,23 @@
+"""Grad-sync strategy ``compressed``: mrd_zero1 with int8-quantized
+reduce-scatter payloads (the ``int8`` payload transform; wire bytes / 4 vs
+fp32).  On TPU the per-stage dequant-accumulate runs through the
+``mrd_combine`` Pallas kernel via the ``device_fused`` executor.
+
+Quantization noise is bounded per stage (see
+``repro.collectives.transforms``) but uncompensated — error feedback
+(EF-SGD residual carry across steps) is not implemented yet.
+"""
+
+from __future__ import annotations
+
+from jax.sharding import Mesh
+
+from repro.distributed.gradsync import register
+from repro.distributed.gradsync.common import TrainConfig
+from repro.distributed.gradsync.mrd_zero1 import make_zero1
+from repro.models.config import ModelConfig
+
+
+@register("compressed")
+def make(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
+    return make_zero1(cfg, mesh, tcfg, transform="int8")

@@ -1,0 +1,21 @@
+"""Grad-sync strategy ``mrd_paper``: the paper-faithful collective.
+
+Pure modified-recursive-doubling Allreduce of the full flat gradient
+(paper S2) chained over the DP axes + a replicated optimizer; no RS/AG,
+no optimizer-state sharding.  This is the reference the beyond-paper
+modes (``mrd_zero1``, ``compressed``) are measured against.
+"""
+
+from __future__ import annotations
+
+from jax.sharding import Mesh
+
+from repro.distributed.gradsync import register
+from repro.distributed.gradsync.common import TrainConfig
+from repro.distributed.gradsync.mrd_zero1 import make_zero1
+from repro.models.config import ModelConfig
+
+
+@register("mrd_paper")
+def make(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
+    return make_zero1(cfg, mesh, tcfg, paper_mode=True)

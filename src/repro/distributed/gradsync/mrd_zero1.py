@@ -1,0 +1,261 @@
+"""Grad-sync strategy ``mrd_zero1``: the paper's butterfly as a ZeRO-1
+distributed optimizer (beyond-paper).
+
+Inside ``shard_map`` (manual over the DP axes, auto over "model"): chained
+recursive-halving **reduce-scatter** of the flat fp32 gradient over each DP
+axis, shard-local AdamW on the fp32 master shard, then chained
+recursive-doubling **all-gather** of the bf16 params.  Works for
+non-power-of-two DP groups (the paper's headline case) — the elasticity
+path uses exactly this.  Hierarchy is implicit: with mesh axes
+("pod","data"), the chained RS/AG reduces inter-pod bytes by 1/p0(data).
+
+All collectives run through :class:`repro.collectives.plans.CollectivePlan`;
+``mrd_paper`` and ``compressed`` reuse this builder with a different
+schedule/transform binding.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.collectives import plans
+from repro.collectives.schedules import pivot
+from repro.distributed import sharding as shd
+from repro.distributed.gradsync import common, register
+from repro.distributed.gradsync.common import TrainConfig
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import dtype_of
+from repro.optim import optimizer as opt_lib
+
+
+def zero1_shard_len(n_params: int, mesh: Mesh, dp_axes, block: int = 256) -> tuple[int, int]:
+    """(padded_total, shard_len) for the chained RS over dp_axes."""
+    prod_p0 = 1
+    for ax in dp_axes:
+        p0, _, _ = pivot(mesh.shape[ax])
+        prod_p0 *= p0
+    quantum = prod_p0 * block
+    padded = ((n_params + quantum - 1) // quantum) * quantum
+    return padded, padded // prod_p0
+
+
+def zero1_owner_segments(mesh: Mesh, dp_axes) -> list:
+    """For each flattened DP rank (axis-major order), the natural-order global
+    segment index it owns after the chained RS, or None (non-pivot rank of a
+    non-power-of-two axis)."""
+    sizes = [mesh.shape[ax] for ax in dp_axes]
+    p0s = [pivot(sz)[0] for sz in sizes]
+    owners = []
+    for flat_rank in range(int(np.prod(sizes))):
+        idxs = list(np.unravel_index(flat_rank, sizes))
+        if any(i >= q for i, q in zip(idxs, p0s)):
+            owners.append(None)
+        else:
+            seg = 0
+            for i, q in zip(idxs, p0s):
+                seg = seg * q + i
+            owners.append(seg)
+    return owners
+
+
+def make_zero1(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    tcfg: TrainConfig,
+    *,
+    transform: str = "identity",
+    paper_mode: bool = False,
+):
+    """Shared builder for the flat-gradient MRD strategies.
+
+    Params: TP-sharded (auto "model" axis), replicated across DP (manual).
+    Opt state: flat fp32 shards owned per DP rank, global shape [dp, m]
+    (``paper_mode``: every rank owns a full replica, pure RD-butterfly
+    allreduce — the paper's S2 collective — and no RS/AG).
+    Global grad-norm clipping uses the paper's MRD allreduce on the scalar.
+    """
+    rules = shd.make_rules(cfg, mesh, fsdp=False)  # DP-replicated params
+    remat_policy = common.REMAT_POLICIES[tcfg.remat]
+    pdt = dtype_of(cfg.param_dtype)
+    executor = common.resolve_executor(tcfg, compressed=transform != "identity")
+    dp_axes = rules.dp_axes
+    dp = rules.dp
+    monitor = common.build_monitor(tcfg, rules)
+
+    # the plan bindings: one code path for plain/compressed, 1/N axes
+    rs_plan = plans.reduce_scatter_plan(
+        axes=dp_axes, op="sum", transform=transform, executor=executor
+    )
+    ag_plan = plans.allgather_plan(axes=dp_axes, executor=executor)
+    scalar_ar = plans.allreduce_plan(schedule="mrd", axes=dp_axes, op="sum")
+
+    pshape = jax.eval_shape(lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshape))
+    padded, shard_len = zero1_shard_len(n_params, mesh, dp_axes)
+    if paper_mode:
+        shard_len = padded  # every rank owns (a replica of) the full vector
+    owners = zero1_owner_segments(mesh, dp_axes)
+
+    def init_state(key):
+        params = transformer.init_params(cfg, key)
+        flat, _ = jax.flatten_util.ravel_pytree(
+            jax.tree.map(lambda x: x.astype(jnp.float32), params)
+        )
+        flat = jnp.pad(flat, (0, padded - flat.shape[0]))
+        if paper_mode:
+            masters = jnp.broadcast_to(flat, (dp, shard_len))
+        else:
+            segs = flat.reshape(-1, shard_len)  # [prod_p0, m]
+            rows = [
+                segs[o] if o is not None else jnp.zeros((shard_len,), jnp.float32)
+                for o in owners
+            ]
+            masters = jnp.stack(rows)  # [dp, m]
+        state = {
+            "params": params,
+            "opt": {
+                "master": masters,
+                "mu": jnp.zeros((dp, shard_len), jnp.float32),
+                "nu": jnp.zeros((dp, shard_len), jnp.float32),
+            },
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if monitor is not None:
+            state["monitor"] = common.monitor_rows_init(monitor, dp)
+        return state
+
+    def state_specs(state):
+        pspecs = shd.param_specs(cfg, rules, state["params"])
+        dpP = P(dp_axes)
+        specs = {
+            "params": pspecs,
+            "opt": {"master": dpP, "mu": dpP, "nu": dpP},
+            "step": P(),
+        }
+        if monitor is not None:
+            specs["monitor"] = jax.tree.map(lambda _: dpP, state["monitor"])
+        return specs
+
+    def _is_owner():
+        """Inside the manual region: does this rank own a live segment?"""
+        ok = jnp.ones((), jnp.bool_)
+        for ax in dp_axes:
+            p0, _, _ = pivot(mesh.shape[ax])
+            ok &= jax.lax.axis_index(ax) < p0
+        return ok
+
+    def train_step(state, batch):
+        _, unravel = jax.flatten_util.ravel_pytree(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pshape)
+        )
+
+        def local_step(params, opt, step, mon_state, local_batch):
+            with shd.sharding_ctx(cfg, common.manual_rules(rules)):
+                grads, loss, metrics = common.microbatched_grads(
+                    params, local_batch, cfg, remat_policy, tcfg.microbatches
+                )
+            flat, _ = jax.flatten_util.ravel_pytree(
+                jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            )
+            flat = jnp.pad(flat, (0, padded - flat.shape[0]))
+            if paper_mode:
+                # the paper's Allreduce: full-buffer XOR butterfly per DP axis
+                gshard = scalar_ar.run(flat) / dp
+                gnorm = jnp.sqrt(jnp.sum(gshard * gshard))
+            else:
+                # beyond-paper: chained RS over DP axes -> mean segment
+                gshard = rs_plan.run(flat) / dp
+                # global grad norm via the paper's MRD allreduce on a scalar
+                own = _is_owner()
+                sq = jnp.where(own, jnp.sum(gshard * gshard), 0.0)
+                gnorm = jnp.sqrt(scalar_ar.run(sq))
+            if tcfg.optimizer.grad_clip > 0:
+                scale = jnp.minimum(
+                    1.0, tcfg.optimizer.grad_clip / jnp.maximum(gnorm, 1e-12)
+                )
+                gshard = gshard * scale
+            master, new_opt = opt_lib.apply_update_vector(
+                gshard,
+                {"master": opt["master"][0], "mu": opt["mu"][0], "nu": opt["nu"][0]},
+                tcfg.optimizer,
+                step,
+            )
+            if paper_mode:
+                new_flat = master.astype(pdt)  # already full-length
+            else:
+                # recursive-doubling all-gather of updated bf16 params
+                new_flat = ag_plan.run(master.astype(pdt))
+            new_params = unravel(new_flat[:n_params].astype(jnp.float32))
+            new_params = jax.tree.map(
+                lambda a, b: a.astype(b.dtype), new_params, params
+            )
+
+            mon_out, done, val = common.local_monitor_tick(
+                monitor, mon_state, metrics["per_example"].mean(), step
+            )
+            opt_out = jax.tree.map(lambda x: x[None], new_opt)
+            return (
+                new_params,
+                opt_out,
+                mon_out,
+                loss[None],
+                gnorm[None],
+                done,
+                val,
+            )
+
+        dpP = P(dp_axes)
+        bspecs = common.batch_specs(cfg, rules, batch)
+        if monitor is not None:
+            mon_state_in = state["monitor"]
+            mon_spec = jax.tree.map(lambda _: dpP, state["monitor"])
+        else:
+            mon_state_in = jnp.zeros((dp, 1), jnp.float32)
+            mon_spec = dpP
+        out = compat.shard_map(
+            local_step,
+            mesh=mesh,
+            in_specs=(
+                jax.tree.map(lambda _: P(), state["params"]),
+                {"master": dpP, "mu": dpP, "nu": dpP},
+                P(),
+                mon_spec,
+                bspecs,
+            ),
+            out_specs=(
+                jax.tree.map(lambda _: P(), state["params"]),
+                {"master": dpP, "mu": dpP, "nu": dpP},
+                mon_spec,
+                dpP,
+                dpP,
+                dpP,
+                dpP,
+            ),
+            axis_names=set(dp_axes),
+            check_vma=False,
+        )(state["params"], state["opt"], state["step"], mon_state_in, batch)
+        params, opt, mon, loss, gnorm, done, val = out
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        if monitor is not None:
+            new_state["monitor"] = mon
+        metrics = {
+            "loss": loss.mean(),
+            "grad_norm": gnorm[0],
+            "converged": done[0],
+            "monitor_value": val[0],
+        }
+        return new_state, metrics
+
+    return train_step, init_state, state_specs, rules
+
+
+@register("mrd_zero1")
+def make(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
+    return make_zero1(cfg, mesh, tcfg)

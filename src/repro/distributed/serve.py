@@ -1,0 +1,87 @@
+"""Serving step builders: decode/prefill wiring + decode-cache sharding."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import dtype_of
+
+
+def cache_specs(cfg: ModelConfig, rules: shd.ShardingRules, cache: Any):
+    """PartitionSpecs for a decode cache pytree."""
+
+    def spec(path, leaf):
+        name = None
+        for e in reversed(path):
+            if isinstance(e, jax.tree_util.DictKey):
+                name = str(e.key)
+                break
+        shape = leaf.shape
+        if name in ("k", "v", "local_k", "local_v", "global_k", "global_v", "attn_k", "attn_v"):
+            lead = len(shape) - 4  # [..., B, W, KV, hd]
+            b = rules.batch_axes(shape[lead])
+            if rules.kv_heads_sharded:
+                tail = (b, None, rules.tp_axis, None)
+            else:
+                tail = (b, rules.tp_axis if shape[lead + 1] % rules.tp == 0 else None, None, None)
+            return P(*([None] * lead), *tail)
+        if name in ("k_scale", "v_scale"):  # [L, B, W, KV]
+            lead = len(shape) - 3
+            b = rules.batch_axes(shape[lead])
+            sdim = rules.tp_axis if (not rules.kv_heads_sharded and shape[lead + 1] % rules.tp == 0) else None
+            return P(*([None] * lead), b, sdim, None)
+        if name == "h":  # [L, B, di, st]
+            return P(None, rules.batch_axes(shape[1]), rules.tp_if(shape[2]), None)
+        if name == "conv":  # [L, B, K-1, di]
+            return P(None, rules.batch_axes(shape[1]), None, rules.tp_if(shape[3]))
+        if name == "m_h":  # [G, k, B, nh, hp, st]
+            return P(None, None, rules.batch_axes(shape[2]), rules.tp_if(shape[3]), None, None)
+        if name == "m_conv":  # [G, k, B, K-1, convdim]
+            return P(None, None, rules.batch_axes(shape[2]), None, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def _serve_needs_fsdp(cfg: ModelConfig, mesh: Mesh) -> bool:
+    """bf16 weights sharded over "model" alone must fit in ~half the HBM."""
+    tp = mesh.shape.get("model", 1)
+    return cfg.n_params() * 2 / tp > 8e9
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh):
+    """Decode step: (params, tokens [B], cache, cache_len) -> (logits, cache)."""
+    rules = shd.make_rules(cfg, mesh, fsdp=_serve_needs_fsdp(cfg, mesh))
+
+    def serve_step(params, tokens, cache, cache_len):
+        with shd.sharding_ctx(cfg, rules):
+            return transformer.forward_decode(params, tokens, cache, cache_len, cfg)
+
+    return serve_step, rules
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    """Prefill: full forward, returns last-position logits [B, V]."""
+    rules = shd.make_rules(cfg, mesh, fsdp=_serve_needs_fsdp(cfg, mesh))
+
+    def prefill_step(params, batch):
+        with shd.sharding_ctx(cfg, rules):
+            x, _ = transformer._embed_inputs(params, batch, cfg)
+            x = shd.constrain(x.astype(dtype_of(cfg.compute_dtype)), "tokens")
+            S = x.shape[1]
+            pos = jnp.arange(S)[None, :]
+            x, _ = transformer._run_stack(params, x, cfg, pos)
+            from repro.models.layers import rmsnorm
+
+            x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+            return transformer._logits(params, x, cfg)[:, 0]
+
+    return prefill_step, rules

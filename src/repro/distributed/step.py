@@ -1,755 +1,84 @@
-"""Train/serve step builders: sharding, microbatching, remat, grad sync,
-and the paper's convergence monitor — all wired per (arch x mesh x mode).
+"""Train/serve step wiring — thin facade over the layered subsystems.
 
-Grad-sync strategies (DESIGN.md S2):
+The actual machinery lives in:
 
-- ``gspmd``: pure pjit.  Params FSDP+TP sharded; XLA inserts the DP
-  all-reduce in backward.  This is the baseline every MRD mode is measured
-  against.
-- ``mrd_zero1``: the paper's butterfly as a ZeRO-1 distributed optimizer —
-  inside ``shard_map`` (manual over the DP axes, auto over "model"):
-  chained recursive-halving **reduce-scatter** of the flat fp32 gradient over
-  each DP axis, shard-local AdamW on the fp32 master shard, then chained
-  recursive-doubling **all-gather** of the bf16 params.  Works for
-  non-power-of-two DP groups (the paper's headline case) — the elasticity
-  path uses exactly this.
-- ``compressed``: mrd_zero1 with int8-quantized reduce-scatter payloads +
-  error feedback.
-- Hierarchy is implicit: with mesh axes ("pod","data"), the chained RS/AG
-  (data first, then pod) reduces inter-pod bytes by 1/p0(data) — the
-  'hierarchical allreduce' of DESIGN.md.
+- ``repro.distributed.gradsync``  — the grad-sync strategy registry
+  (DESIGN.md S2): one module per mode (``gspmd`` | ``mrd_paper`` |
+  ``mrd_leaf`` | ``mrd_zero1`` | ``compressed`` | ``local_sgd``), each
+  composing the shared monitor/optimizer/microbatching pieces in
+  ``gradsync.common`` with its own gradient-crossing plan;
+- ``repro.collectives``           — schedules x executors x transforms x
+  plans (DESIGN.md S1); every collective any strategy issues runs
+  through a single :class:`repro.collectives.plans.CollectivePlan`;
+- ``repro.distributed.serve``     — decode/prefill steps + cache specs.
 
-The ConvergenceMonitor (paper Alg. 1/2 over the DP axis) advances one MRD
-stage per train step; it costs one scalar ppermute per step and never blocks.
+The ConvergenceMonitor (paper Alg. 1/2 over the DP axes) advances one MRD
+stage per train step; it costs one scalar ppermute per step and never
+blocks.  This module keeps the historical import surface
+(``repro.distributed.step``) stable for launchers, benchmarks, and tests.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Optional
+from jax.sharding import Mesh
 
-import jax
-import jax.flatten_util
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
-
-from repro.core import mrd
-from repro.core.detection import ConvergenceMonitor
-from repro.core.topology import pivot
-from repro.distributed import sharding as shd
-from repro.models import transformer
+from repro.distributed.gradsync import (  # noqa: F401
+    GRAD_SYNC,
+    available as available_grad_sync,
+    make_step_factory,
+)
+from repro.distributed.gradsync import make_train_step as _registry_make_train_step
+from repro.distributed.gradsync.common import (  # noqa: F401
+    REMAT_POLICIES,
+    TrainConfig,
+    batch_specs,
+    build_monitor,
+    microbatched_grads as _microbatched_grads,
+)
+from repro.distributed.gradsync.mrd_zero1 import (  # noqa: F401
+    zero1_owner_segments,
+    zero1_shard_len,
+)
+from repro.distributed.serve import (  # noqa: F401
+    cache_specs,
+    make_prefill_step,
+    make_serve_step,
+)
 from repro.models.config import ModelConfig
-from repro.models.layers import dtype_of
-from repro.optim import optimizer as opt_lib
-
-REMAT_POLICIES = {
-    "none": None,
-    "full": jax.checkpoint_policies.nothing_saveable,
-    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
-}
-
-
-@dataclasses.dataclass(frozen=True)
-class TrainConfig:
-    microbatches: int = 1
-    remat: str = "full"  # 'none' | 'full' | 'dots'
-    # 'gspmd' | 'mrd_paper' (paper-faithful RD-butterfly allreduce, flat)
-    # | 'mrd_leaf' (butterfly on TP-sharded grad leaves: no flatten/reshard)
-    # | 'mrd_zero1' (beyond-paper RS+AG ZeRO-1) | 'compressed' | 'local_sgd'
-    grad_sync: str = "gspmd"
-    local_sync_every: int = 8  # local_sgd: MRD param-average period (staleness bound)
-    monitor: bool = True
-    monitor_mode: str = "inexact"  # paper Alg.1 ('inexact') / Alg.2 ('exact')
-    monitor_threshold: float = 1e-3
-    optimizer: opt_lib.OptimizerConfig = dataclasses.field(
-        default_factory=opt_lib.OptimizerConfig
-    )
-    fsdp: bool = True  # weight sharding over "data" (gspmd mode)
-
-
-# ---------------------------------------------------------------------------
-# Shared pieces
-# ---------------------------------------------------------------------------
-
-
-def batch_specs(cfg: ModelConfig, rules: shd.ShardingRules, batch: Any):
-    """PartitionSpecs for a train batch pytree (batch dim over DP axes)."""
-
-    def spec(leaf):
-        b = rules.batch_axes(leaf.shape[0])
-        return P(b, *([None] * (leaf.ndim - 1)))
-
-    return jax.tree.map(spec, batch)
-
-
-def _microbatched_grads(params, batch, cfg, remat_policy, microbatches: int):
-    """Gradient accumulation over microbatches via lax.scan (fp32 accum).
-    Returns (grads_fp32, mean_loss, metrics_last)."""
-
-    def loss_fn(p, mb):
-        return transformer.forward_train(p, mb, cfg, remat_policy)
-
-    if microbatches == 1:
-        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
-        return jax.tree.map(lambda x: x.astype(jnp.float32), g), loss, metrics
-
-    def reshape_mb(x):
-        return x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:])
-
-    mbs = jax.tree.map(
-        lambda x: shd.constrain(reshape_mb(x), "mb_batch"), batch
-    )
-    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-
-    def body(carry, mb):
-        g_acc, loss_acc = carry
-        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
-        g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
-        return (g_acc, loss_acc + loss), metrics
-
-    (g, loss_sum), metrics = jax.lax.scan(body, (g0, 0.0), mbs, unroll=cfg.scan_unroll)
-    g = jax.tree.map(lambda x: x / microbatches, g)
-    metrics = jax.tree.map(lambda x: x[-1], metrics)
-    return g, loss_sum / microbatches, metrics
-
-
-def _monitor_tick(monitor: Optional[ConvergenceMonitor], mon_state, metric, step):
-    if monitor is None:
-        return mon_state, jnp.zeros((), jnp.bool_), jnp.zeros((), jnp.float32)
-    return monitor.step(mon_state, metric, step)
-
-
-# ---------------------------------------------------------------------------
-# gspmd train step
-# ---------------------------------------------------------------------------
-
-
-def make_train_step_gspmd(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
-    """Returns (jitted step, init_state_fn, state_shardings_fn)."""
-    rules = shd.make_rules(cfg, mesh, fsdp=tcfg.fsdp)
-    remat_policy = REMAT_POLICIES[tcfg.remat]
-    pdt = dtype_of(cfg.param_dtype)
-    monitor = (
-        ConvergenceMonitor(
-            axis_name=rules.dp_axes if len(rules.dp_axes) > 1 else rules.dp_axes[0],
-            threshold=tcfg.monitor_threshold,
-            mode=tcfg.monitor_mode,
-        )
-        if tcfg.monitor
-        else None
-    )
-    dp = rules.dp
-
-    def init_state(key):
-        params = transformer.init_params(cfg, key)
-        state = {
-            "params": params,
-            "opt": opt_lib.init_opt_state(params),
-            "step": jnp.zeros((), jnp.int32),
-        }
-        if monitor is not None:
-            mon = monitor.init(varying=False)
-            state["monitor"] = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (dp,) + x.shape), mon
-            )
-        return state
-
-    def state_specs(state):
-        pspecs = shd.param_specs(cfg, rules, state["params"])
-        specs = {
-            "params": pspecs,
-            "opt": {
-                "master": pspecs,
-                "mu": pspecs,
-                "nu": pspecs,
-            },
-            "step": P(),
-        }
-        if monitor is not None:
-            specs["monitor"] = jax.tree.map(
-                lambda x: P(rules.dp_axes), state["monitor"]
-            )
-        return specs
-
-    def train_step(state, batch):
-        with shd.sharding_ctx(cfg, rules):
-            grads, loss, metrics = _microbatched_grads(
-                state["params"], batch, cfg, remat_policy, tcfg.microbatches
-            )
-        grads, gnorm = opt_lib.clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
-        params, opt = opt_lib.apply_update(
-            grads, state["opt"], tcfg.optimizer, state["step"], pdt
-        )
-        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
-        out_metrics = {"loss": loss, "grad_norm": gnorm}
-
-        if monitor is not None:
-            # per-DP-shard local loss feeds the paper's staged detection
-            def mon_fn(mon_st, per_ex, step):
-                local = jax.tree.map(lambda x: x[0], mon_st)
-                m = per_ex.mean()
-                new, done, val = monitor.step(local, m, step)
-                return (
-                    jax.tree.map(lambda x: x[None], new),
-                    done[None],
-                    val[None],
-                )
-
-            # per_example is [B/microbatches]; when that no longer divides
-            # the DP extent (large mb on the multi-pod mesh), feed it
-            # replicated — each worker then monitors the same global mean,
-            # which stays sound (the staged reduction just becomes uniform).
-            pe_spec = P(rules.batch_axes(metrics["per_example"].shape[0]))
-            mon_new, done, val = jax.shard_map(
-                mon_fn,
-                mesh=mesh,
-                in_specs=(
-                    jax.tree.map(lambda _: P(rules.dp_axes), state["monitor"]),
-                    pe_spec,
-                    P(),
-                ),
-                out_specs=(
-                    jax.tree.map(lambda _: P(rules.dp_axes), state["monitor"]),
-                    P(rules.dp_axes),
-                    P(rules.dp_axes),
-                ),
-                axis_names=set(rules.dp_axes),
-                check_vma=False,
-            )(state["monitor"], metrics["per_example"], state["step"])
-            new_state["monitor"] = mon_new
-            out_metrics["converged"] = done[0]
-            out_metrics["monitor_value"] = val[0]
-        return new_state, out_metrics
-
-    return train_step, init_state, state_specs, rules
-
-
-# ---------------------------------------------------------------------------
-# MRD-ZeRO-1 train step (paper butterfly as the distributed optimizer)
-# ---------------------------------------------------------------------------
-
-
-def _chained_rs(vec, axes, *, compressed=False):
-    for ax in axes:
-        if compressed:
-            vec = mrd.compressed_reduce_scatter(vec, ax)
-        else:
-            vec = mrd.reduce_scatter(vec, ax)
-    return vec
-
-
-def _chained_ag(vec, axes):
-    for ax in reversed(axes):
-        vec = mrd.allgather(vec, ax)
-    return vec
-
-
-def zero1_shard_len(n_params: int, mesh: Mesh, dp_axes, block: int = 256) -> tuple[int, int]:
-    """(padded_total, shard_len) for the chained RS over dp_axes."""
-    prod_p0 = 1
-    for ax in dp_axes:
-        p0, _, _ = pivot(mesh.shape[ax])
-        prod_p0 *= p0
-    quantum = prod_p0 * block
-    padded = ((n_params + quantum - 1) // quantum) * quantum
-    return padded, padded // prod_p0
-
-
-def zero1_owner_segments(mesh: Mesh, dp_axes) -> list:
-    """For each flattened DP rank (axis-major order), the natural-order global
-    segment index it owns after the chained RS, or None (non-pivot rank of a
-    non-power-of-two axis)."""
-    sizes = [mesh.shape[ax] for ax in dp_axes]
-    p0s = [pivot(sz)[0] for sz in sizes]
-    owners = []
-    for flat_rank in range(int(np.prod(sizes))):
-        idxs = list(np.unravel_index(flat_rank, sizes))
-        if any(i >= q for i, q in zip(idxs, p0s)):
-            owners.append(None)
-        else:
-            seg = 0
-            for i, q in zip(idxs, p0s):
-                seg = seg * q + i
-            owners.append(seg)
-    return owners
-
-
-def make_train_step_mrd(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
-    """MRD-ZeRO-1 (grad_sync = 'mrd_zero1' | 'compressed').
-
-    Params: TP-sharded (auto "model" axis), replicated across DP (manual).
-    Opt state: flat fp32 shards owned per DP rank, global shape [dp, m].
-    Global grad-norm clipping uses the paper's MRD allreduce on the scalar.
-    """
-    rules = shd.make_rules(cfg, mesh, fsdp=False)  # DP-replicated params
-    remat_policy = REMAT_POLICIES[tcfg.remat]
-    pdt = dtype_of(cfg.param_dtype)
-    compressed = tcfg.grad_sync == "compressed"
-    # paper-faithful mode: pure recursive-doubling allreduce of the full
-    # gradient (paper S2) + replicated optimizer; no RS/AG, no opt sharding.
-    paper_mode = tcfg.grad_sync == "mrd_paper"
-    dp_axes = rules.dp_axes
-    dp = rules.dp
-    monitor = (
-        ConvergenceMonitor(
-            axis_name=dp_axes if len(dp_axes) > 1 else dp_axes[0],
-            threshold=tcfg.monitor_threshold,
-            mode=tcfg.monitor_mode,
-        )
-        if tcfg.monitor
-        else None
-    )
-
-    pshape = jax.eval_shape(lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
-    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshape))
-    padded, shard_len = zero1_shard_len(n_params, mesh, dp_axes)
-    if paper_mode:
-        shard_len = padded  # every rank owns (a replica of) the full vector
-    owners = zero1_owner_segments(mesh, dp_axes)
-
-    def _is_owner():
-        """Inside the manual region: does this rank own a live segment?"""
-        ok = jnp.ones((), jnp.bool_)
-        for ax in dp_axes:
-            p0, _, _ = pivot(mesh.shape[ax])
-            ok &= jax.lax.axis_index(ax) < p0
-        return ok
-
-    def init_state(key):
-        params = transformer.init_params(cfg, key)
-        flat, _ = jax.flatten_util.ravel_pytree(
-            jax.tree.map(lambda x: x.astype(jnp.float32), params)
-        )
-        flat = jnp.pad(flat, (0, padded - flat.shape[0]))
-        if paper_mode:
-            masters = jnp.broadcast_to(flat, (dp, shard_len))
-        else:
-            segs = flat.reshape(-1, shard_len)  # [prod_p0, m]
-            rows = [
-                segs[o] if o is not None else jnp.zeros((shard_len,), jnp.float32)
-                for o in owners
-            ]
-            masters = jnp.stack(rows)  # [dp, m]
-        state = {
-            "params": params,
-            "opt": {
-                "master": masters,
-                "mu": jnp.zeros((dp, shard_len), jnp.float32),
-                "nu": jnp.zeros((dp, shard_len), jnp.float32),
-            },
-            "step": jnp.zeros((), jnp.int32),
-        }
-        if monitor is not None:
-            mon = monitor.init(varying=False)
-            state["monitor"] = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (dp,) + x.shape), mon
-            )
-        return state
-
-    def state_specs(state):
-        pspecs = shd.param_specs(cfg, rules, state["params"])
-        dpP = P(dp_axes)
-        specs = {
-            "params": pspecs,
-            "opt": {"master": dpP, "mu": dpP, "nu": dpP},
-            "step": P(),
-        }
-        if monitor is not None:
-            specs["monitor"] = jax.tree.map(lambda _: dpP, state["monitor"])
-        return specs
-
-    def train_step(state, batch):
-        _, unravel = jax.flatten_util.ravel_pytree(
-            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pshape)
-        )
-
-        def local_step(params, opt, step, mon_state, local_batch):
-            with shd.sharding_ctx(cfg, rules.manual_region()):
-                grads, loss, metrics = _microbatched_grads(
-                    params, local_batch, cfg, remat_policy, tcfg.microbatches
-                )
-            flat, _ = jax.flatten_util.ravel_pytree(
-                jax.tree.map(lambda g: g.astype(jnp.float32), grads)
-            )
-            flat = jnp.pad(flat, (0, padded - flat.shape[0]))
-            if paper_mode:
-                # the paper's Allreduce: full-buffer XOR butterfly per DP axis
-                gshard = flat
-                for ax in dp_axes:
-                    gshard = mrd.allreduce(gshard, ax, op="sum")
-                gshard = gshard / dp
-                gnorm = jnp.sqrt(jnp.sum(gshard * gshard))
-            else:
-                # beyond-paper: chained RS over DP axes -> mean segment
-                gshard = _chained_rs(flat, dp_axes, compressed=compressed) / dp
-                # global grad norm via the paper's MRD allreduce on a scalar
-                own = _is_owner()
-                sq = jnp.where(own, jnp.sum(gshard * gshard), 0.0)
-                for ax in dp_axes:
-                    sq = mrd.allreduce(sq, ax, op="sum")
-                gnorm = jnp.sqrt(sq)
-            if tcfg.optimizer.grad_clip > 0:
-                scale = jnp.minimum(
-                    1.0, tcfg.optimizer.grad_clip / jnp.maximum(gnorm, 1e-12)
-                )
-                gshard = gshard * scale
-            master, new_opt = opt_lib.apply_update_vector(
-                gshard,
-                {"master": opt["master"][0], "mu": opt["mu"][0], "nu": opt["nu"][0]},
-                tcfg.optimizer,
-                step,
-            )
-            if paper_mode:
-                new_flat = master.astype(pdt)  # already full-length
-            else:
-                # recursive-doubling all-gather of updated bf16 params
-                new_flat = _chained_ag(master.astype(pdt), dp_axes)
-            new_params = unravel(new_flat[:n_params].astype(jnp.float32))
-            new_params = jax.tree.map(
-                lambda a, b: a.astype(b.dtype), new_params, params
-            )
-
-            if monitor is not None:
-                local_mon = jax.tree.map(lambda x: x[0], mon_state)
-                new_mon, done, val = monitor.step(
-                    local_mon, metrics["per_example"].mean(), step
-                )
-                mon_out = jax.tree.map(lambda x: x[None], new_mon)
-            else:
-                mon_out = mon_state
-                done = jnp.zeros((), jnp.bool_)
-                val = jnp.zeros((), jnp.float32)
-            opt_out = jax.tree.map(lambda x: x[None], new_opt)
-            return (
-                new_params,
-                opt_out,
-                mon_out,
-                loss[None],
-                gnorm[None],
-                done[None],
-                val[None],
-            )
-
-        dpP = P(dp_axes)
-        bspecs = batch_specs(cfg, rules, batch)
-        if monitor is not None:
-            mon_state_in = state["monitor"]
-            mon_spec = jax.tree.map(lambda _: dpP, state["monitor"])
-        else:
-            mon_state_in = jnp.zeros((dp, 1), jnp.float32)
-            mon_spec = dpP
-        out = jax.shard_map(
-            local_step,
-            mesh=mesh,
-            in_specs=(
-                jax.tree.map(lambda _: P(), state["params"]),
-                {"master": dpP, "mu": dpP, "nu": dpP},
-                P(),
-                mon_spec,
-                bspecs,
-            ),
-            out_specs=(
-                jax.tree.map(lambda _: P(), state["params"]),
-                {"master": dpP, "mu": dpP, "nu": dpP},
-                mon_spec,
-                dpP,
-                dpP,
-                dpP,
-                dpP,
-            ),
-            axis_names=set(dp_axes),
-            check_vma=False,
-        )(state["params"], state["opt"], state["step"], mon_state_in, batch)
-        params, opt, mon, loss, gnorm, done, val = out
-        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
-        if monitor is not None:
-            new_state["monitor"] = mon
-        metrics = {
-            "loss": loss.mean(),
-            "grad_norm": gnorm[0],
-            "converged": done[0],
-            "monitor_value": val[0],
-        }
-        return new_state, metrics
-
-    return train_step, init_state, state_specs, rules
-
-
-def make_train_step_mrd_leaf(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
-    """Leaf-wise MRD butterfly gradient allreduce (beyond-paper iteration on
-    'mrd_paper'): the butterfly runs per gradient leaf, which stays TP-sharded
-    over the auto "model" axis — ppermute moves 1/tp of each leaf per device
-    and no flatten/reshard collectives appear.  Optimizer: fp32 tree, TP-
-    sharded, DP-replicated (memory ~ 16 B/param / tp)."""
-    rules = shd.make_rules(cfg, mesh, fsdp=False)
-    remat_policy = REMAT_POLICIES[tcfg.remat]
-    pdt = dtype_of(cfg.param_dtype)
-    dp_axes = rules.dp_axes
-    dp = rules.dp
-    monitor = (
-        ConvergenceMonitor(
-            axis_name=dp_axes if len(dp_axes) > 1 else dp_axes[0],
-            threshold=tcfg.monitor_threshold,
-            mode=tcfg.monitor_mode,
-        )
-        if tcfg.monitor
-        else None
-    )
-
-    def init_state(key):
-        params = transformer.init_params(cfg, key)
-        state = {
-            "params": params,
-            "opt": opt_lib.init_opt_state(params),
-            "step": jnp.zeros((), jnp.int32),
-        }
-        if monitor is not None:
-            mon = monitor.init(varying=False)
-            state["monitor"] = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (dp,) + x.shape), mon
-            )
-        return state
-
-    def state_specs(state):
-        pspecs = shd.param_specs(cfg, rules, state["params"])
-        specs = {
-            "params": pspecs,
-            "opt": {"master": pspecs, "mu": pspecs, "nu": pspecs},
-            "step": P(),
-        }
-        if monitor is not None:
-            specs["monitor"] = jax.tree.map(lambda _: P(dp_axes), state["monitor"])
-        return specs
-
-    def train_step(state, batch):
-        def local_step(params, opt, step, mon_state, local_batch):
-            with shd.sharding_ctx(cfg, rules.manual_region()):
-                grads, loss, metrics = _microbatched_grads(
-                    params, local_batch, cfg, remat_policy, tcfg.microbatches
-                )
-            # the paper's butterfly, leaf-wise over TP-sharded grads
-            for ax in dp_axes:
-                grads = mrd.allreduce(grads, ax, op="sum")
-            grads = jax.tree.map(lambda g: g / dp, grads)
-            grads, gnorm = opt_lib.clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
-            params, opt = opt_lib.apply_update(
-                grads, opt, tcfg.optimizer, step, pdt
-            )
-            if monitor is not None:
-                local_mon = jax.tree.map(lambda x: x[0], mon_state)
-                new_mon, done, val = monitor.step(
-                    local_mon, metrics["per_example"].mean(), step
-                )
-                mon_out = jax.tree.map(lambda x: x[None], new_mon)
-            else:
-                mon_out = mon_state
-                done = jnp.zeros((), jnp.bool_)
-                val = jnp.zeros((), jnp.float32)
-            return params, opt, mon_out, loss[None], gnorm[None], done[None], val[None]
-
-        dpP = P(dp_axes)
-        bspecs = batch_specs(cfg, rules, batch)
-        if monitor is not None:
-            mon_state_in = state["monitor"]
-            mon_spec = jax.tree.map(lambda _: dpP, state["monitor"])
-        else:
-            mon_state_in = jnp.zeros((dp, 1), jnp.float32)
-            mon_spec = dpP
-        rep = lambda t: jax.tree.map(lambda _: P(), t)
-        out = jax.shard_map(
-            local_step,
-            mesh=mesh,
-            in_specs=(rep(state["params"]), rep(state["opt"]), P(), mon_spec, bspecs),
-            out_specs=(rep(state["params"]), rep(state["opt"]), mon_spec, dpP, dpP, dpP, dpP),
-            axis_names=set(dp_axes),
-            check_vma=False,
-        )(state["params"], state["opt"], state["step"], mon_state_in, batch)
-        params, opt, mon, loss, gnorm, done, val = out
-        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
-        if monitor is not None:
-            new_state["monitor"] = mon
-        return new_state, {
-            "loss": loss.mean(),
-            "grad_norm": gnorm[0],
-            "converged": done[0],
-            "monitor_value": val[0],
-        }
-
-    return train_step, init_state, state_specs, rules
-
-
-def make_train_step_local_sgd(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
-    """Bounded-staleness local SGD (asynchronous-iterations-inspired;
-    DESIGN.md §9): each DP worker trains its own replica with purely local
-    gradients for ``local_sync_every`` steps, then replicas are averaged by
-    the paper's collectives (Rabenseifner RS+AG over the flat vector).
-    Stragglers never block intermediate steps; the staleness bound plays the
-    role of the paper's bounded retards.  Per-replica state costs dp x the
-    replicated-params memory — pair with TP for larger models."""
-    rules = shd.make_rules(cfg, mesh, fsdp=False)
-    remat_policy = REMAT_POLICIES[tcfg.remat]
-    pdt = dtype_of(cfg.param_dtype)
-    dp_axes = rules.dp_axes
-    dp = rules.dp
-    H = max(tcfg.local_sync_every, 1)
-
-    def init_state(key):
-        params = transformer.init_params(cfg, key)
-        rep = lambda x: jnp.broadcast_to(x[None], (dp,) + x.shape)
-        return {
-            "params": jax.tree.map(rep, params),
-            "opt": jax.tree.map(rep, opt_lib.init_opt_state(params)),
-            "step": jnp.zeros((), jnp.int32),
-        }
-
-    def state_specs(state):
-        dpP_tree = lambda t: jax.tree.map(lambda _: P(dp_axes), t)
-        return {
-            "params": dpP_tree(state["params"]),
-            "opt": dpP_tree(state["opt"]),
-            "step": P(),
-        }
-
-    def train_step(state, batch):
-        def local_step(params_s, opt_s, step, local_batch):
-            params = jax.tree.map(lambda x: x[0], params_s)
-            opt = jax.tree.map(lambda x: x[0], opt_s)
-            with shd.sharding_ctx(cfg, rules.manual_region()):
-                grads, loss, metrics = _microbatched_grads(
-                    params, local_batch, cfg, remat_policy, tcfg.microbatches
-                )
-            grads, gnorm = opt_lib.clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
-            params, opt = opt_lib.apply_update(
-                grads, opt, tcfg.optimizer, step, pdt
-            )
-
-            def sync(ps):
-                # paper's butterfly: average the replicas (flat, RS+AG)
-                avg = mrd.tree_allreduce_flat(
-                    jax.tree.map(lambda x: x.astype(jnp.float32), ps),
-                    dp_axes[-1] if len(dp_axes) == 1 else dp_axes[-1],
-                )
-                if len(dp_axes) > 1:  # chain over outer axes (pod)
-                    for ax in dp_axes[:-1]:
-                        avg = mrd.tree_allreduce_flat(avg, ax)
-                return jax.tree.map(
-                    lambda a, b: (a / dp).astype(b.dtype), avg, ps
-                )
-
-            do_sync = (step + 1) % H == 0
-            params = jax.lax.cond(do_sync, sync, lambda q: q, params)
-            add1 = lambda t: jax.tree.map(lambda x: x[None], t)
-            return add1(params), add1(opt), loss[None], gnorm[None]
-
-        dpP = P(dp_axes)
-        dpP_tree = lambda t: jax.tree.map(lambda _: dpP, t)
-        bspecs = batch_specs(cfg, rules, batch)
-        params_s, opt_s, loss, gnorm = jax.shard_map(
-            local_step,
-            mesh=mesh,
-            in_specs=(dpP_tree(state["params"]), dpP_tree(state["opt"]), P(), bspecs),
-            out_specs=(dpP_tree(state["params"]), dpP_tree(state["opt"]), dpP, dpP),
-            axis_names=set(dp_axes),
-            check_vma=False,
-        )(state["params"], state["opt"], state["step"], batch)
-        new_state = {"params": params_s, "opt": opt_s, "step": state["step"] + 1}
-        return new_state, {
-            "loss": loss.mean(),
-            "grad_norm": gnorm.mean(),
-            "converged": jnp.zeros((), jnp.bool_),
-            "monitor_value": jnp.zeros((), jnp.float32),
-        }
-
-    return train_step, init_state, state_specs, rules
 
 
 def make_train_step(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
-    if tcfg.grad_sync == "gspmd":
-        return make_train_step_gspmd(cfg, mesh, tcfg)
-    if tcfg.grad_sync in ("mrd_zero1", "compressed", "mrd_paper"):
-        return make_train_step_mrd(cfg, mesh, tcfg)
-    if tcfg.grad_sync == "mrd_leaf":
-        return make_train_step_mrd_leaf(cfg, mesh, tcfg)
-    if tcfg.grad_sync == "local_sgd":
-        return make_train_step_local_sgd(cfg, mesh, tcfg)
-    raise ValueError(f"unknown grad_sync {tcfg.grad_sync!r}")
+    """Resolve ``tcfg.grad_sync`` in the registry and build
+    ``(train_step, init_state, state_specs, rules)``."""
+    return _registry_make_train_step(cfg, mesh, tcfg)
 
 
-# ---------------------------------------------------------------------------
-# Serving steps
-# ---------------------------------------------------------------------------
+# --- deprecated aliases (pre-registry entry points) ------------------------
 
 
-def cache_specs(cfg: ModelConfig, rules: shd.ShardingRules, cache: Any):
-    """PartitionSpecs for a decode cache pytree."""
+def make_train_step_gspmd(cfg, mesh, tcfg):
+    from repro.distributed.gradsync import gspmd
 
-    def spec(path, leaf):
-        name = None
-        for e in reversed(path):
-            if isinstance(e, jax.tree_util.DictKey):
-                name = str(e.key)
-                break
-        shape = leaf.shape
-        if name in ("k", "v", "local_k", "local_v", "global_k", "global_v", "attn_k", "attn_v"):
-            lead = len(shape) - 4  # [..., B, W, KV, hd]
-            b = rules.batch_axes(shape[lead])
-            if rules.kv_heads_sharded:
-                tail = (b, None, rules.tp_axis, None)
-            else:
-                tail = (b, rules.tp_axis if shape[lead + 1] % rules.tp == 0 else None, None, None)
-            return P(*([None] * lead), *tail)
-        if name in ("k_scale", "v_scale"):  # [L, B, W, KV]
-            lead = len(shape) - 3
-            b = rules.batch_axes(shape[lead])
-            sdim = rules.tp_axis if (not rules.kv_heads_sharded and shape[lead + 1] % rules.tp == 0) else None
-            return P(*([None] * lead), b, sdim, None)
-        if name == "h":  # [L, B, di, st]
-            return P(None, rules.batch_axes(shape[1]), rules.tp_if(shape[2]), None)
-        if name == "conv":  # [L, B, K-1, di]
-            return P(None, rules.batch_axes(shape[1]), None, rules.tp_if(shape[3]))
-        if name == "m_h":  # [G, k, B, nh, hp, st]
-            return P(None, None, rules.batch_axes(shape[2]), rules.tp_if(shape[3]), None, None)
-        if name == "m_conv":  # [G, k, B, K-1, convdim]
-            return P(None, None, rules.batch_axes(shape[2]), None, None)
-        return P(*([None] * len(shape)))
-
-    return jax.tree_util.tree_map_with_path(spec, cache)
+    return gspmd.make(cfg, mesh, tcfg)
 
 
-def _serve_needs_fsdp(cfg: ModelConfig, mesh: Mesh) -> bool:
-    """bf16 weights sharded over "model" alone must fit in ~half the HBM."""
-    tp = mesh.shape.get("model", 1)
-    return cfg.n_params() * 2 / tp > 8e9
+def make_train_step_mrd(cfg, mesh, tcfg):
+    from repro.distributed.gradsync.mrd_zero1 import make_zero1
+
+    return make_zero1(
+        cfg, mesh, tcfg,
+        transform="int8" if tcfg.grad_sync == "compressed" else "identity",
+        paper_mode=tcfg.grad_sync == "mrd_paper",
+    )
 
 
-def make_serve_step(cfg: ModelConfig, mesh: Mesh):
-    """Decode step: (params, tokens [B], cache, cache_len) -> (logits, cache)."""
-    rules = shd.make_rules(cfg, mesh, fsdp=_serve_needs_fsdp(cfg, mesh))
+def make_train_step_mrd_leaf(cfg, mesh, tcfg):
+    from repro.distributed.gradsync import mrd_leaf
 
-    def serve_step(params, tokens, cache, cache_len):
-        with shd.sharding_ctx(cfg, rules):
-            return transformer.forward_decode(params, tokens, cache, cache_len, cfg)
-
-    return serve_step, rules
+    return mrd_leaf.make(cfg, mesh, tcfg)
 
 
-def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
-    """Prefill: full forward, returns last-position logits [B, V]."""
-    rules = shd.make_rules(cfg, mesh, fsdp=_serve_needs_fsdp(cfg, mesh))
+def make_train_step_local_sgd(cfg, mesh, tcfg):
+    from repro.distributed.gradsync import local_sgd
 
-    def prefill_step(params, batch):
-        with shd.sharding_ctx(cfg, rules):
-            x, _ = transformer._embed_inputs(params, batch, cfg)
-            x = shd.constrain(x.astype(dtype_of(cfg.compute_dtype)), "tokens")
-            S = x.shape[1]
-            pos = jnp.arange(S)[None, :]
-            x, _ = transformer._run_stack(params, x, cfg, pos)
-            from repro.models.layers import rmsnorm
-
-            x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
-            return transformer._logits(params, x, cfg)[:, 0]
-
-    return prefill_step, rules
+    return local_sgd.make(cfg, mesh, tcfg)

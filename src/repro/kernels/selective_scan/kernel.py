@@ -17,6 +17,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUCompilerParams -> CompilerParams across JAX versions
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _scan_kernel(decay_ref, bx_ref, c_ref, y_ref, h_scratch, *, chunk: int):
     # decay_ref/bx_ref: [chunk, bd, N]; c_ref: [chunk, N]; y_ref: [chunk, bd]
@@ -64,7 +67,7 @@ def selective_scan_fwd(
         out_specs=pl.BlockSpec((None, chunk, bd), lambda b, d, s: (b, s, d)),
         out_shape=jax.ShapeDtypeStruct((B, S_p, D), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bd, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")
         ),
         interpret=interpret,

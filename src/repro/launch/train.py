@@ -16,11 +16,13 @@ import time
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, NamedSharding
+from jax.sharding import NamedSharding
 
+from repro import compat
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import registry
 from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.distributed import gradsync
 from repro.distributed import step as step_lib
 from repro.optim.optimizer import OptimizerConfig
 
@@ -29,8 +31,8 @@ def build_mesh(dp: int, tp: int):
     axes = ("data", "model") if tp > 1 else ("data",)
     shape = (dp, tp) if tp > 1 else (dp,)
     n = dp * tp
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes),
+    return compat.make_mesh(
+        shape, axes, axis_types=compat.default_axis_types(len(axes)),
         devices=jax.devices()[:n],
     )
 
@@ -46,7 +48,7 @@ def main(argv=None):
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--grad-sync", default="gspmd",
-                    choices=["gspmd", "mrd_zero1", "compressed"])
+                    choices=gradsync.available())
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--remat", default="none", choices=["none", "full", "dots"])
     ap.add_argument("--schedule", default="cosine", choices=["cosine", "wsd", "const"])

@@ -43,18 +43,26 @@ class ElasticTrainer:
     """Drive training across failures.
 
     ``step_fn_factory(mesh) -> (train_step, init_state, state_specs, rules)``
-    (the signature of ``repro.distributed.step.make_train_step`` partially
-    applied with cfg/tcfg); ``pipe_factory(mesh)`` builds the data pipeline.
+    (what ``repro.distributed.gradsync.make_step_factory(model_cfg, tcfg)``
+    returns — any mode in the ``GRAD_SYNC`` registry rebuilds cleanly on a
+    shrunk, possibly non-power-of-two mesh because every strategy's
+    collectives run through the MRD-native plan layer); alternatively pass
+    ``(model_cfg, tcfg)`` directly and the factory is built from the
+    registry.  ``pipe_factory(mesh)`` builds the data pipeline.
     """
 
     def __init__(
         self,
         mesh,
-        step_fn_factory: Callable,
+        step_fn_factory,
         pipe_factory: Callable,
         checkpointer: Checkpointer,
         cfg: ElasticConfig = ElasticConfig(),
     ):
+        if isinstance(step_fn_factory, tuple):
+            from repro.distributed import gradsync
+
+            step_fn_factory = gradsync.make_step_factory(*step_fn_factory)
         self.mesh = mesh
         self.step_fn_factory = step_fn_factory
         self.pipe_factory = pipe_factory

@@ -16,13 +16,17 @@ _SCRIPT = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import PartitionSpec as P, AxisType
+    from jax.sharding import PartitionSpec as P
+    from repro import compat
     from repro.core import mrd, nonblocking, detection
     from repro.core.topology import pivot
 
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return compat.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
     def mesh_for(p):
-        return jax.make_mesh((p,), ("r",), devices=jax.devices()[:p],
-                             axis_types=(AxisType.Auto,))
+        return compat.make_mesh((p,), ("r",), devices=jax.devices()[:p],
+                                axis_types=compat.default_axis_types(1))
 
     rng = np.random.default_rng(0)
 
@@ -31,7 +35,7 @@ _SCRIPT = textwrap.dedent(
         mesh = mesh_for(p)
         x = jnp.asarray(rng.standard_normal((p, 6)).astype(np.float32))
         for op in ["sum", "max", "min"]:
-            dev = jax.jit(jax.shard_map(
+            dev = jax.jit(shard_map(
                 lambda v: mrd.allreduce(v[0], "r", op=op)[None],
                 mesh=mesh, in_specs=P("r"), out_specs=P("r")))(x)
             sim = mrd.sim_allreduce(x, op=op)
@@ -44,7 +48,7 @@ _SCRIPT = textwrap.dedent(
         n = p0 * 4
         mesh = mesh_for(p)
         x = jnp.asarray(rng.standard_normal((p, n)).astype(np.float32))
-        dev = jax.jit(jax.shard_map(
+        dev = jax.jit(shard_map(
             lambda v: mrd.rabenseifner_allreduce(v[0], "r")[None],
             mesh=mesh, in_specs=P("r"), out_specs=P("r")))(x)
         np.testing.assert_allclose(
@@ -57,7 +61,7 @@ _SCRIPT = textwrap.dedent(
     mesh = mesh_for(p)
     tree = {"a": jnp.asarray(rng.standard_normal((p, 3, 2)), jnp.float32),
             "b": jnp.asarray(rng.standard_normal((p, 5)), jnp.float32)}
-    dev = jax.jit(jax.shard_map(
+    dev = jax.jit(shard_map(
         lambda t: jax.tree.map(
             lambda l: l[None],
             mrd.tree_allreduce_flat(jax.tree.map(lambda l: l[0], t), "r")),
@@ -67,13 +71,13 @@ _SCRIPT = textwrap.dedent(
     print("tree-flat OK")
 
     # --- hierarchical allreduce over a 2D mesh (pod-aware) ---
-    mesh2 = jax.make_mesh((2, 4), ("pod", "data"), devices=jax.devices()[:8],
-                          axis_types=(AxisType.Auto,)*2)
+    mesh2 = compat.make_mesh((2, 4), ("pod", "data"), devices=jax.devices()[:8],
+                          axis_types=compat.default_axis_types(2))
     n = 8
     x = jnp.asarray(rng.standard_normal((8, n)).astype(np.float32))
     def hier(v):
         return mrd.hierarchical_allreduce(v[0], "data", "pod")[None]
-    dev = jax.jit(jax.shard_map(
+    dev = jax.jit(shard_map(
         hier, mesh=mesh2,
         in_specs=P(("pod", "data")),
         out_specs=P(("pod", "data"))))(x.reshape(8, n))
@@ -91,7 +95,7 @@ _SCRIPT = textwrap.dedent(
         for _ in range(nonblocking.cycle_length(p)):
             st = nonblocking.step(st, val, axis_name="r", op="max")
         return st["result"][None], st["flag"][None]
-    res, flag = jax.jit(jax.shard_map(
+    res, flag = jax.jit(shard_map(
         drive, mesh=mesh, in_specs=P("r"), out_specs=(P("r"), P("r"))))(x)
     assert np.allclose(np.asarray(res), float(p)), res
     assert np.all(np.asarray(flag)), flag
@@ -112,7 +116,7 @@ _SCRIPT = textwrap.dedent(
     steps = 40
     series = jnp.geomspace(1.0, 1e-6, steps, dtype=jnp.float32)
     series = jnp.broadcast_to(series, (p, steps))
-    dones, vals = jax.jit(jax.shard_map(
+    dones, vals = jax.jit(shard_map(
         lambda s: run_monitor(s[0]), mesh=mesh, in_specs=P("r"),
         out_specs=(P("r"), P("r"))))(series)
     assert bool(np.asarray(dones)[0, -1]), "monitor never detected"

@@ -4,8 +4,7 @@ launcher helper properties."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import async_engine as ae
 from repro.core import mrd, solvers

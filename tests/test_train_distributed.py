@@ -13,7 +13,8 @@ _SCRIPT = textwrap.dedent(
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import compat
     import dataclasses
 
     from repro.configs import registry
@@ -24,9 +25,9 @@ _SCRIPT = textwrap.dedent(
     cfg = registry.get_smoke_config("llama3.2-1b")
 
     def run_mode(mesh_shape, axis_names, grad_sync, steps=6, monitor=True, ndev=8):
-        mesh = jax.make_mesh(mesh_shape, axis_names,
-                             devices=jax.devices()[:ndev],
-                             axis_types=(AxisType.Auto,)*len(axis_names))
+        mesh = compat.make_mesh(mesh_shape, axis_names,
+                                devices=jax.devices()[:ndev],
+                                axis_types=compat.default_axis_types(len(axis_names)))
         tcfg = step_lib.TrainConfig(
             microbatches=2, remat="none", grad_sync=grad_sync, monitor=monitor,
             monitor_threshold=1e-6,
@@ -78,8 +79,8 @@ _SCRIPT = textwrap.dedent(
     # --- 5. monitor fires when threshold is lenient ---
     _, _, metrics = run_mode((4, 2), ("data", "model"), "gspmd", steps=8)
     # threshold 1e-6 won't fire in 8 steps; re-run with a huge threshold
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,)*2)
+    mesh = compat.make_mesh((4, 2), ("data", "model"),
+                            axis_types=compat.default_axis_types(2))
     tcfg = step_lib.TrainConfig(
         microbatches=1, remat="none", grad_sync="gspmd", monitor=True,
         monitor_threshold=100.0,
