@@ -1,15 +1,20 @@
 """Paper S2 table: MRD cost model — steps, messages, volume vs p, and the
-alpha-beta time comparison against ring/tree/Rabenseifner schedules — plus a
-measured sweep of the plan layer (schedule x transform through the
-registries) on the sim executor.
+alpha-beta time comparison against ring/tree/Rabenseifner schedules — plus
+measured sweeps of the plan layer on the sim executor: the registry sweep
+(schedule x transform) and the bucketed-vs-flat-vs-per-leaf gradient sweep
+(many-leaf tree through the DESIGN.md S10 pipelined engine).
 
 CSV on stdout: name,us_per_call,derived
 JSON: writes BENCH_mrd.json (schema: {"model": [...], "measured": [...]}) so
 the perf trajectory is machine-readable across PRs.
+
+``--quick`` runs a reduced sweep (fewer p values, fewer timing iterations)
+for CI smoke; the row names it emits are a subset of the full run's.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -63,12 +68,95 @@ def _time_call(f, *args, iters: int = 20) -> float:
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def measured_rows():
+def bucketed_rows(quick: bool = False):
+    """Gradient-scale sweep: a many-leaf (>= 64) fp32 tree allreduced three
+    ways — per-leaf (one schedule cycle per tensor), flat (single ravel
+    vector, the pre-bucketing path), and bucketed/pipelined
+    (``run_bucketed``, DESIGN.md S10).
+
+    Two regimes per variant:
+
+    - ``..._jit_..``: steady-state inside one fused XLA computation.  On
+      the CPU sim every stage fuses, so there is *no* per-message launch
+      cost and the three paths land close together — this row set tracks
+      regressions, not the alpha win.
+    - ``..._dispatch_..``: op-by-op (eager) execution, where every stage
+      of every tensor pays a real launch overhead — the CPU analog of the
+      per-message alpha cost that the per-leaf path pays once per tensor
+      on device interconnects.  This is the regime the bucketed engine
+      targets; the bucketed row carries ``speedup_vs_perleaf``
+      (acceptance: >= 1.3x on the >= 64-leaf tree).
+    """
+    out = []
+    rng = np.random.default_rng(0)
+    n_leaves = 64
+    for p in ((8,) if quick else (8, 12)):
+        sizes = [int(s) for s in rng.integers(64, 2048, n_leaves)]
+        tree = {
+            f"g{i:02d}": jnp.asarray(
+                rng.standard_normal((p, s)), jnp.float32
+            )
+            for i, s in enumerate(sizes)
+        }
+        total = sum(sizes)
+        plan = plans.allreduce_plan(schedule="mrd", p=p, op="sum")
+        bucket_bytes = (total * 4) // 6  # ~6 buckets of the tree
+
+        def flat_fn(t):
+            vec = jnp.concatenate(
+                [l.reshape(p, -1) for l in jax.tree.leaves(t)], axis=1
+            )
+            pad = (-vec.shape[1]) % plan.pad_quantum()
+            red = plan.run(jnp.pad(vec, ((0, 0), (0, pad))))
+            return red[:, : vec.shape[1]]
+
+        def bucketed_fn(t):
+            return plan.run_bucketed(t, bucket_bytes=bucket_bytes)
+
+        variants = {"perleaf": plan.run, "flat": flat_fn, "bucketed": bucketed_fn}
+
+        def _sync(o):
+            for leaf in jax.tree.leaves(o):
+                leaf.block_until_ready()
+
+        def _time(f, iters, reps=3):
+            _sync(f(tree))  # warmup (compile in the jit regime)
+            best = float("inf")  # best-of-reps: robust to scheduler noise
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                for _ in range(iters):
+                    _sync(f(tree))
+                best = min(best, (time.perf_counter() - t0) / iters * 1e6)
+            return best
+
+        for regime, wrap, iters in (
+            ("jit", jax.jit, 5 if quick else 20),
+            ("dispatch", lambda f: f, 2 if quick else 4),
+        ):
+            times = {n: _time(wrap(f), iters) for n, f in variants.items()}
+            for name, us in times.items():
+                row = {
+                    "name": f"sim_grad{n_leaves}_{name}_{regime}_p{p}",
+                    "schedule": "mrd",
+                    "transform": "identity",
+                    "p": p,
+                    "n": total,
+                    "n_leaves": n_leaves,
+                    "us_per_call": round(us, 1),
+                }
+                if name == "bucketed":
+                    row["speedup_vs_perleaf"] = round(times["perleaf"] / us, 2)
+                    row["speedup_vs_flat"] = round(times["flat"] / us, 2)
+                out.append(row)
+    return out
+
+
+def measured_rows(quick: bool = False):
     """Registry sweep: every (schedule x transform) pair the plan layer can
     bind, measured on the sim executor (CPU correctness path)."""
     out = []
     rng = np.random.default_rng(0)
-    for p in (8, 12, 16, 32):
+    for p in ((8, 12) if quick else (8, 12, 16, 32)):
         p0, _, _ = T.pivot(p)
         n = max(4096, p0 * 256)
         x = jnp.asarray(rng.standard_normal((p, n)), jnp.float32)
@@ -99,7 +187,7 @@ def measured_rows():
                 )
 
     # legacy row set (kept so old trend lines keep their names)
-    for p in (8, 16, 32):
+    for p in ((8,) if quick else (8, 16, 32)):
         x = jnp.asarray(np.random.default_rng(0).standard_normal((p, 4096)), jnp.float32)
         f = jax.jit(lambda v: mrd.sim_allreduce(v, op="sum"))
         us = _time_call(f, x)
@@ -116,9 +204,9 @@ def measured_rows():
     return out
 
 
-def main(json_path: str = "BENCH_mrd.json"):
+def main(json_path: str = "BENCH_mrd.json", quick: bool = False):
     model = model_rows()
-    measured = measured_rows()
+    measured = measured_rows(quick) + bucketed_rows(quick)
     for name, us, derived in model:
         print(f"{name},{us},{derived}")
     for r in measured:
@@ -135,4 +223,11 @@ def main(json_path: str = "BENCH_mrd.json"):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_mrd.json", help="output JSON path")
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="reduced sweep (CI smoke): fewer p values and iterations",
+    )
+    args = ap.parse_args()
+    main(json_path=args.json, quick=args.quick)

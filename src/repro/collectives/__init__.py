@@ -10,10 +10,20 @@ wire format is a one-file change (DESIGN.md S1):
 3. **transforms** — wire formats + the ``TRANSFORMS`` registry
    (``identity`` | ``int8``);
 4. **plans**      — :class:`CollectivePlan` binds one of each to axes/p
-   and exposes blocking ``run()`` and the paper's non-blocking
+   and exposes blocking ``run()``, the bucketed pipelined
+   ``run_bucketed()``/``run_buffers()`` engine (DESIGN.md S10, packing
+   via ``repro.collectives.buckets``), and the paper's non-blocking
    ``init()``/``step()`` state machine.
 """
 
+from repro.collectives.buckets import (  # noqa: F401
+    Bucket,
+    BucketLayout,
+    LeafSlot,
+    build_layout,
+    pack,
+    unpack,
+)
 from repro.collectives.executors import (  # noqa: F401
     EXECUTORS,
     Backend,

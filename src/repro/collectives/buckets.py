@@ -1,0 +1,242 @@
+"""Bucketizer for the pipelined collective execution engine (DESIGN.md S10).
+
+Gradient-scale collectives should neither ravel the whole pytree into one
+flat vector (mixed dtypes promote — bf16 leaves travel as fp32, ~2x wire
+bytes — and the single flat buffer doubles peak memory) nor run a full
+schedule cycle per leaf (per-message alpha cost paid once per tensor).
+This module packs pytree leaves into **dtype-homogeneous, size-capped
+buckets** with stable pack/unpack layout metadata; the plan layer
+(:meth:`repro.collectives.plans.CollectivePlan.run_bucketed`) then
+executes schedules stage-major across the buckets so collective-permute
+overlaps with the neighbouring buckets' encode/combine compute.
+
+Layout rules (deterministic for a given tree structure + cap):
+
+- leaves are visited in ``jax.tree.leaves`` order;
+- each bucket holds leaves of exactly one dtype (no promotion, ever);
+- a bucket closes when adding the next same-dtype leaf would push it past
+  ``bucket_bytes`` (a leaf larger than the cap gets a bucket of its own —
+  leaves are never split);
+- each bucket's element length is padded up to a multiple of ``quantum``
+  (the owning plan's :meth:`pad_quantum`), so reduce-scatter phases
+  divide evenly;
+- buckets are ordered by their first leaf's tree position.
+
+Peak extra memory is therefore bounded by ``max(bucket_bytes,
+largest_leaf_bytes) + quantum padding`` per in-flight bucket instead of
+the full flat gradient.
+
+Sim-executor trees carry a stacked leading rank axis ``[p, ...]``; pass
+``stacked=p`` to :func:`build_layout` and the per-rank views are packed
+along the trailing axis (buffers become ``[p, length]``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_BUCKET_BYTES = 32 * 2**20  # production-ish cap (cf. DDP's 25 MB)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Where one pytree leaf lives inside its bucket.
+
+    ``shape`` is the per-rank (local) shape — the stacked sim rank axis,
+    if any, is *not* included.  ``offset``/``size`` are element counts
+    into the bucket's unpadded prefix.
+    """
+
+    index: int  # position in jax.tree.leaves order
+    shape: tuple[int, ...]
+    dtype: str  # canonical dtype name ('float32', 'bfloat16', ...)
+    offset: int
+    size: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One dtype-homogeneous wire buffer: which slots it carries and how
+    long it is after padding to the plan's quantum."""
+
+    dtype: str
+    slots: tuple[LeafSlot, ...]
+    length: int  # padded element length (multiple of the layout quantum)
+
+    @property
+    def used(self) -> int:
+        return sum(s.size for s in self.slots)
+
+    @property
+    def nbytes(self) -> int:
+        return self.length * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """Stable pack/unpack metadata for one tree structure.
+
+    Built once per (tree structure, bucket_bytes, quantum) — reusable
+    across steps since it depends only on static shapes/dtypes.
+    """
+
+    buckets: tuple[Bucket, ...]
+    treedef: Any
+    n_leaves: int
+    quantum: int
+    stacked: Optional[int]  # sim rank count, or None for device/local trees
+
+    @property
+    def bucket_lengths(self) -> tuple[int, ...]:
+        return tuple(b.length for b in self.buckets)
+
+    @property
+    def total_padded(self) -> int:
+        return sum(b.length for b in self.buckets)
+
+
+def _dtype_name(dtype) -> str:
+    return jnp.dtype(dtype).name
+
+
+def build_layout(
+    tree,
+    *,
+    bucket_bytes: Optional[int] = None,
+    quantum: int = 1,
+    stacked: Optional[int] = None,
+) -> BucketLayout:
+    """Plan dtype-homogeneous, size-capped buckets for ``tree``.
+
+    ``tree`` may hold arrays or ``jax.ShapeDtypeStruct``s (only shapes and
+    dtypes are read).  ``bucket_bytes=None`` means one unbounded bucket
+    per dtype.  ``quantum`` is the element-count divisor each bucket is
+    padded to (the owning plan's ``pad_quantum()``).
+    """
+    if quantum < 1:
+        raise ValueError(f"quantum must be >= 1, got {quantum}")
+    leaves, treedef = jax.tree.flatten(tree)
+    open_slots: dict[str, list[LeafSlot]] = {}
+    open_elems: dict[str, int] = {}
+    closed: list[tuple[str, tuple[LeafSlot, ...]]] = []
+
+    def close(dt: str):
+        closed.append((dt, tuple(open_slots.pop(dt))))
+        open_elems.pop(dt)
+
+    for i, leaf in enumerate(leaves):
+        shape = tuple(leaf.shape)
+        if stacked is not None:
+            if not shape or shape[0] != stacked:
+                raise ValueError(
+                    f"stacked={stacked} needs every leaf to carry a leading "
+                    f"rank axis of that size; leaf {i} has shape {shape}"
+                )
+            shape = shape[1:]
+        dt = _dtype_name(leaf.dtype)
+        size = math.prod(shape)
+        itemsize = jnp.dtype(dt).itemsize
+        if dt in open_slots:
+            if (
+                bucket_bytes is not None
+                and (open_elems[dt] + size) * itemsize > bucket_bytes
+                and open_slots[dt]
+            ):
+                close(dt)
+        if dt not in open_slots:
+            open_slots[dt] = []
+            open_elems[dt] = 0
+        open_slots[dt].append(
+            LeafSlot(index=i, shape=shape, dtype=dt, offset=open_elems[dt], size=size)
+        )
+        open_elems[dt] += size
+    for dt in list(open_slots):
+        close(dt)
+
+    closed.sort(key=lambda b: b[1][0].index)  # stable: first-leaf tree order
+    buckets = tuple(
+        Bucket(
+            dtype=dt,
+            slots=slots,
+            length=max(quantum, -(-sum(s.size for s in slots) // quantum) * quantum),
+        )
+        for dt, slots in closed
+    )
+    return BucketLayout(
+        buckets=buckets,
+        treedef=treedef,
+        n_leaves=len(leaves),
+        quantum=quantum,
+        stacked=stacked,
+    )
+
+
+def pack(tree, layout: BucketLayout) -> list:
+    """Flatten ``tree`` into the layout's bucket buffers.
+
+    Returns one 1-D buffer per bucket (``[p, length]`` when the layout is
+    stacked).  Leaf dtypes must match the layout exactly — buckets never
+    promote.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    if treedef != layout.treedef or len(leaves) != layout.n_leaves:
+        raise ValueError(
+            f"tree structure {treedef} does not match the layout's "
+            f"{layout.treedef}"
+        )
+    p = layout.stacked
+    bufs = []
+    for b in layout.buckets:
+        parts = []
+        for s in b.slots:
+            leaf = leaves[s.index]
+            if _dtype_name(leaf.dtype) != s.dtype:
+                raise ValueError(
+                    f"leaf {s.index} has dtype {_dtype_name(leaf.dtype)}, "
+                    f"layout expects {s.dtype} (buckets never promote)"
+                )
+            parts.append(leaf.reshape(-1) if p is None else leaf.reshape(p, -1))
+        pad = b.length - b.used
+        if p is None:
+            buf = jnp.concatenate(parts) if parts else jnp.zeros((0,), b.dtype)
+            if pad:
+                buf = jnp.pad(buf, (0, pad))
+        else:
+            buf = (
+                jnp.concatenate(parts, axis=1)
+                if parts
+                else jnp.zeros((p, 0), b.dtype)
+            )
+            if pad:
+                buf = jnp.pad(buf, ((0, 0), (0, pad)))
+        bufs.append(buf)
+    return bufs
+
+
+def unpack(bufs: Sequence, layout: BucketLayout):
+    """Inverse of :func:`pack`: slice each bucket back into leaves with
+    their original shapes and dtypes and rebuild the tree.
+
+    Buffers are cast to each slot's layout dtype, so a path that widened
+    a bucket (e.g. bf16 params gathered after an fp32 optimizer step)
+    still round-trips to the layout's dtypes.
+    """
+    if len(bufs) != len(layout.buckets):
+        raise ValueError(
+            f"got {len(bufs)} buffers for a {len(layout.buckets)}-bucket layout"
+        )
+    p = layout.stacked
+    leaves: list = [None] * layout.n_leaves
+    for b, buf in zip(layout.buckets, bufs):
+        for s in b.slots:
+            if p is None:
+                piece = buf[s.offset : s.offset + s.size].reshape(s.shape)
+            else:
+                piece = buf[:, s.offset : s.offset + s.size].reshape((p,) + s.shape)
+            leaves[s.index] = piece.astype(s.dtype)
+    return jax.tree.unflatten(layout.treedef, leaves)

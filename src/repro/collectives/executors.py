@@ -22,6 +22,7 @@ construction, the validated math.
 
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
 
 import jax
@@ -119,6 +120,25 @@ class FusedDeviceBackend(DeviceBackend):
         return mrd_combine(x, q, scales)
 
 
+@functools.lru_cache(maxsize=4096)
+def _sim_gather_spec(p: int, pairs) -> tuple[np.ndarray, np.ndarray]:
+    """Per-(p, pairs) gather index / receive mask, built once.
+
+    Schedules reuse the same static pairs tuples across stages, buckets,
+    and traces, so the Python loop runs once per distinct stage shape
+    instead of on every trace.  Arrays are frozen — cache entries are
+    shared.
+    """
+    idx = np.zeros(p, dtype=np.int32)
+    has = np.zeros(p, dtype=bool)
+    for s, d in pairs:
+        idx[d] = s
+        has[d] = True
+    idx.setflags(write=False)
+    has.setflags(write=False)
+    return idx, has
+
+
 class SimBackend:
     """Executes stages on stacked arrays [p, ...] on a single device."""
 
@@ -132,11 +152,7 @@ class SimBackend:
         return self.p
 
     def permute(self, x, pairs):
-        idx = np.zeros(self.p, dtype=np.int32)
-        has = np.zeros(self.p, dtype=bool)
-        for s, d in pairs:
-            idx[d] = s
-            has[d] = True
+        idx, has = _sim_gather_spec(self.p, tuple(pairs))
         recv = jnp.take(x, jnp.asarray(idx), axis=0)
         mask = jnp.asarray(has).reshape((self.p,) + (1,) * (x.ndim - 1))
         return jnp.where(mask, recv, jnp.zeros_like(recv))

@@ -32,7 +32,6 @@ from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-from jax.flatten_util import ravel_pytree
 
 from repro.collectives import transforms as T
 from repro.collectives.executors import make_backend, resolve_op
@@ -40,22 +39,47 @@ from repro.collectives.schedules import Phase, Stage, get_schedule, pivot
 
 # ---------------------------------------------------------------------------
 # The one stage interpreter (all backends, all transforms, all stage kinds)
+#
+# Each stage is split into a *start* half (encode the outgoing payload and
+# issue the permute) and a *finish* half (fold the received payload in).
+# Blocking execution composes the two back-to-back; the bucketed engine
+# (:meth:`CollectivePlan.run_buffers`) interleaves them stage-major across
+# buckets so a bucket's permute is in flight while its neighbours run
+# their encode/combine compute (DESIGN.md S10).
 # ---------------------------------------------------------------------------
 
 
-def exec_stage(x, st: Stage, be, p: int, op: Callable, tf=None):
-    """Apply one schedule stage under backend ``be`` with transform ``tf``.
+def _stage_start(x, st: Stage, be, tf):
+    """Issue the stage's communication; returns the in-flight context.
 
     Reducing stages (``bshift``/``butterfly``/``rs``) send
-    ``tf.encode``-ed payloads and fold them back with ``tf.combine``;
-    copy stages (``fshift``/``ag``) always move raw buffers.
+    ``tf.encode``-ed payloads; copy stages (``fshift``/``ag``) always
+    move raw buffers.
     """
-    tf = tf or T.IdentityTransform()
+    if st.kind in ("bshift", "butterfly"):
+        payload = tf.encode(x, be)
+        return x, tuple(be.permute(leaf, st.pairs) for leaf in payload)
+    if st.kind == "fshift":
+        return x, be.permute(x, st.pairs)
+    if st.kind == "rs":
+        d = st.distance
+        lower, upper = be.split_half(x)
+        my_bit = (be.rank() & d) != 0
+        to_send = be.where(my_bit, lower, upper)
+        keep = be.where(my_bit, upper, lower)
+        payload = tf.encode(to_send, be)
+        return keep, tuple(be.permute(leaf, st.pairs) for leaf in payload)
+    if st.kind == "ag":
+        return x, be.permute(x, st.pairs)
+    raise ValueError(f"bad stage kind {st.kind}")
+
+
+def _stage_finish(ctx, st: Stage, be, p: int, op: Callable, tf):
+    """Fold the in-flight payload from :func:`_stage_start` back in."""
     p0, _, extra = pivot(p)
     r = be.rank()
     if st.kind in ("bshift", "butterfly"):
-        payload = tf.encode(x, be)
-        recv = tuple(be.permute(leaf, st.pairs) for leaf in payload)
+        x, recv = ctx
         # butterfly partners both hold the stage result, so each must combine
         # the *canonical* (wire-roundtripped) views — otherwise a lossy
         # transform leaves the two ranks with slightly different values and
@@ -65,23 +89,24 @@ def exec_stage(x, st: Stage, be, p: int, op: Callable, tf=None):
         pred = (r < extra) if st.kind == "bshift" else (r < p0)
         return be.where(pred, combined, x)
     if st.kind == "fshift":
-        recv = be.permute(x, st.pairs)
+        x, recv = ctx
         return be.where(r >= p0, recv, x)
     if st.kind == "rs":
-        d = st.distance
-        lower, upper = be.split_half(x)
-        my_bit = (r & d) != 0
-        to_send = be.where(my_bit, lower, upper)
-        keep = be.where(my_bit, upper, lower)
-        payload = tf.encode(to_send, be)
-        recv = tuple(be.permute(leaf, st.pairs) for leaf in payload)
+        keep, recv = ctx
         combined = tf.combine(keep, recv, op, be)
         return be.where(r < p0, combined, keep)
     if st.kind == "ag":
-        recv = be.permute(x, st.pairs)
+        x, recv = ctx
         my_bit = (r & st.distance) != 0
         return be.where(my_bit, be.concat(recv, x), be.concat(x, recv))
     raise ValueError(f"bad stage kind {st.kind}")
+
+
+def exec_stage(x, st: Stage, be, p: int, op: Callable, tf=None):
+    """Apply one schedule stage under backend ``be`` with transform ``tf``
+    (start and finish back-to-back — the blocking composition)."""
+    tf = tf or T.IdentityTransform()
+    return _stage_finish(_stage_start(x, st, be, tf), st, be, p, op, tf)
 
 
 def _run_phase(x, collective: str, be, p: int, op: Callable, tf):
@@ -125,6 +150,22 @@ class CollectivePlan:
         self._transform().validate_op(self.op)
 
     # -- layer resolution ---------------------------------------------------
+    #
+    # A frozen dataclass is memoizable: schedule construction, transform
+    # resolution, and backend instantiation are cached per instance (in
+    # ``__dict__``, invisible to dataclass eq/hash) so ``step()``/``run()``
+    # don't rebuild them on every trace.  Anything depending on *device*
+    # axis sizes is keyed by the resolved sizes, since the same plan object
+    # may be traced under meshes of different shapes.
+
+    def _memo(self, key, build):
+        memo = self.__dict__.get("_memo_cache")
+        if memo is None:
+            memo = {}
+            object.__setattr__(self, "_memo_cache", memo)
+        if key not in memo:
+            memo[key] = build()
+        return memo[key]
 
     def _n_axes(self) -> int:
         return len(self.axes) if self.axes is not None else 1
@@ -132,15 +173,29 @@ class CollectivePlan:
     def _phases(self) -> tuple[Phase, ...]:
         if self.phases is not None:
             return self.phases
-        return tuple(get_schedule(self.schedule).phases(self._n_axes()))
+        return self._memo(
+            "phases",
+            lambda: tuple(get_schedule(self.schedule).phases(self._n_axes())),
+        )
 
     def _transform(self):
-        return T.resolve_transform(self.transform, **dict(self.transform_kwargs))
+        return self._memo(
+            "transform",
+            lambda: T.resolve_transform(
+                self.transform, **dict(self.transform_kwargs)
+            ),
+        )
 
     def _backend(self, axis_index: int):
         if self.axes is not None:
-            return make_backend(self.executor, axis=self.axes[axis_index])
-        return make_backend(self.executor, p=self.p)
+            return self._memo(
+                ("backend", axis_index),
+                lambda: make_backend(self.executor, axis=self.axes[axis_index]),
+            )
+        return self._memo(
+            ("backend", axis_index),
+            lambda: make_backend(self.executor, p=self.p),
+        )
 
     def _size(self, axis_index: int) -> int:
         """Static axis size; device sizes resolve inside the traced region."""
@@ -150,21 +205,44 @@ class CollectivePlan:
 
         return compat.axis_size(self.axes[axis_index])
 
+    def _sizes(self) -> tuple[int, ...]:
+        return tuple(self._size(ph.axis_index) for ph in self._phases())
+
     # -- introspection ------------------------------------------------------
 
-    def bound_stages(self) -> list[tuple[Stage, int, int]]:
+    def bound_stages(self) -> tuple[tuple[Stage, int, int], ...]:
         """Flat [(stage, axis_index, p)] across phases (allreduce plans)."""
-        out = []
-        for ph in self._phases():
-            if ph.collective != "allreduce":
-                raise ValueError(
-                    "stage-at-a-time stepping needs an allreduce-only plan "
-                    f"(schedule {self.schedule!r} has a {ph.collective} phase)"
-                )
-            p = self._size(ph.axis_index)
-            for st in ph.stages(p):
-                out.append((st, ph.axis_index, p))
-        return out
+
+        def build():
+            out = []
+            for ph in self._phases():
+                if ph.collective != "allreduce":
+                    raise ValueError(
+                        "stage-at-a-time stepping needs an allreduce-only plan "
+                        f"(schedule {self.schedule!r} has a {ph.collective} phase)"
+                    )
+                p = self._size(ph.axis_index)
+                for st in ph.stages(p):
+                    out.append((st, ph.axis_index, p))
+            return tuple(out)
+
+        return self._memo(("bound_stages", self._sizes()), build)
+
+    def bound_stage_table(
+        self,
+    ) -> tuple[tuple[Stage, str, int, int], ...]:
+        """Flat [(stage, collective, axis_index, p)] across *all* phases —
+        the bucketed engine's iteration order (any phase kinds)."""
+
+        def build():
+            out = []
+            for ph in self._phases():
+                p = self._size(ph.axis_index)
+                for st in ph.stages(p):
+                    out.append((st, ph.collective, ph.axis_index, p))
+            return tuple(out)
+
+        return self._memo(("stage_table", self._sizes()), build)
 
     def cycle_length(self) -> int:
         """Non-blocking calls per completed reduction (>= 1)."""
@@ -218,6 +296,77 @@ class CollectivePlan:
                     )
             x = _run_phase(x, ph.collective, be, p, op, tf)
         return x
+
+    # -- bucketed, pipelined execution (DESIGN.md S10) ----------------------
+
+    def run_buffers(self, bufs: Sequence) -> list:
+        """Execute this plan's stages **stage-major across buffers**.
+
+        ``bufs`` are independent 1-D buffers (sim: ``[p, n]`` stacked) —
+        typically the buckets of :func:`repro.collectives.buckets.pack`.
+        For every stage, buffer *k*'s permute is issued before buffer
+        *k+1*'s previous-stage combine runs, so XLA can overlap
+        collective-permute with the neighbouring buffers' encode/combine
+        compute and no more than one stage of payload per buffer is in
+        flight.  Identical math to :meth:`run` per buffer — bit-identical
+        for the identity transform.
+        """
+        bufs = list(bufs)
+        table = self.bound_stage_table()
+        if not table or not bufs:
+            return bufs
+        op = resolve_op(self.op)
+        tf = self._transform()
+        if any(coll == "reduce_scatter" for _, coll, _, _ in table):
+            q = self.pad_quantum()
+            for i, b in enumerate(bufs):
+                if b.shape[-1] % q:
+                    raise ValueError(
+                        f"reduce-scatter phases need buffer len % {q} == 0 "
+                        f"(pad_quantum), got {b.shape[-1]} for buffer {i}"
+                    )
+        ctxs: list = [None] * len(bufs)
+        prev = None  # (stage, backend, p) whose permutes are in flight
+        for st, _coll, ai, p in table:
+            be = self._backend(ai)
+            for k in range(len(bufs)):
+                if prev is not None:
+                    bufs[k] = _stage_finish(ctxs[k], *prev, op, tf)
+                ctxs[k] = _stage_start(bufs[k], st, be, tf)
+            prev = (st, be, p)
+        return [_stage_finish(c, *prev, op, tf) for c in ctxs]
+
+    def run_bucketed(self, tree, *, bucket_bytes=None, layout=None):
+        """Allreduce a pytree in dtype-homogeneous, size-capped buckets.
+
+        Leaves are packed by :mod:`repro.collectives.buckets` (dtypes are
+        preserved end-to-end — a bf16 leaf travels and reduces as bf16),
+        each bucket padded to :meth:`pad_quantum`, then all stages execute
+        pipelined via :meth:`run_buffers`.  Pass ``layout`` to reuse a
+        prebuilt :class:`~repro.collectives.buckets.BucketLayout`;
+        otherwise one is derived from the tree (``bucket_bytes=None`` =
+        one bucket per dtype).  Only allreduce-composition schedules
+        (every registered ``SCHEDULES`` entry) preserve buffer lengths
+        end-to-end, so primitive RS/AG plans are rejected.
+        """
+        from repro.collectives import buckets as B
+
+        if self.phases is not None and not all(
+            ph.collective == "allreduce" for ph in self.phases
+        ):
+            raise ValueError(
+                "run_bucketed needs an allreduce-schedule plan (primitive "
+                "reduce-scatter/all-gather plans change buffer lengths)"
+            )
+        if layout is None:
+            layout = B.build_layout(
+                tree,
+                bucket_bytes=bucket_bytes,
+                quantum=self.pad_quantum(),
+                stacked=self.p,
+            )
+        bufs = B.pack(tree, layout)
+        return B.unpack(self.run_buffers(bufs), layout)
 
     # -- non-blocking state machine (paper Fig. 4) --------------------------
 
@@ -370,20 +519,31 @@ def tree_allreduce(
     transform: Any = "identity",
     executor: str = "device",
     axes: Sequence[str] = (),
+    p: Optional[int] = None,
+    bucket_bytes: Optional[int] = None,
     **transform_kwargs,
 ):
-    """Allreduce a pytree as one flat padded vector (flat-bucket), chained
-    over ``axes``.  ``rabenseifner`` is the default-worthy choice for
-    bandwidth-bound payloads like gradients; ``mrd`` for latency-bound."""
+    """Allreduce a pytree in dtype-homogeneous buckets, chained over
+    ``axes`` (device) or a stacked rank count ``p`` (sim).
+
+    Runs through :meth:`CollectivePlan.run_bucketed`: leaf dtypes are
+    preserved end-to-end (a bf16+fp32 tree no longer promotes to one fp32
+    wire vector), and ``bucket_bytes`` caps each wire buffer so stages
+    pipeline across buckets instead of materializing one flat gradient.
+    ``rabenseifner`` is the default-worthy schedule for bandwidth-bound
+    payloads like gradients; ``mrd`` for latency-bound.
+    """
+    if p is not None and axes:
+        raise ValueError(
+            "bind exactly one of axes= (device) or p= (sim), not both"
+        )
     plan = allreduce_plan(
         schedule=schedule,
         op=op,
         transform=transform,
         executor=executor,
-        axes=axes,
+        axes=axes if p is None else None,
+        p=p,
         **transform_kwargs,
     )
-    vec, unravel = ravel_pytree(tree)
-    pad = (-vec.shape[0]) % plan.pad_quantum()
-    out = plan.run(jnp.pad(vec, (0, pad)))
-    return unravel(out[: vec.shape[0]])
+    return plan.run_bucketed(tree, bucket_bytes=bucket_bytes)

@@ -125,16 +125,22 @@ def tree_allreduce_flat(
     *,
     op: str | Callable = "sum",
     schedule: str = "rabenseifner",
+    bucket_bytes=None,
 ):
-    """Allreduce a pytree as one flat padded vector (flat-bucket).
+    """Allreduce a pytree through the bucketed engine (DESIGN.md S10).
 
     ``schedule``: any registered schedule name; 'mrd' (paper),
     'rabenseifner' (beyond-paper, default for bandwidth-bound payloads
-    like gradients).
+    like gradients).  ``bucket_bytes`` caps each dtype-homogeneous wire
+    bucket (None = one bucket per dtype — the closest analog of the
+    historical flat-ravel path, but dtype-preserving).
     """
     if axis_size(axis_name) == 1:
         return tree
-    return plans.tree_allreduce(tree, schedule=schedule, op=op, axes=(axis_name,))
+    return plans.tree_allreduce(
+        tree, schedule=schedule, op=op, axes=(axis_name,),
+        bucket_bytes=bucket_bytes,
+    )
 
 
 # ---------------------------------------------------------------------------

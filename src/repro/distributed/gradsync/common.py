@@ -48,6 +48,10 @@ class TrainConfig:
     # collectives executor for the MRD strategies: None = auto ('device';
     # 'device_fused' routes the int8 combine through the Pallas kernel)
     collective_executor: Optional[str] = None
+    # cap on each dtype-homogeneous gradient bucket for the pipelined
+    # collective engine (repro.collectives.buckets, DESIGN.md S10);
+    # None = one unbounded bucket per dtype
+    bucket_bytes: Optional[int] = 32 * 2**20
 
 
 def manual_rules(rules: shd.ShardingRules) -> shd.ShardingRules:

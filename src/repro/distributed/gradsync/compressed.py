@@ -1,7 +1,10 @@
 """Grad-sync strategy ``compressed``: mrd_zero1 with int8-quantized
 reduce-scatter payloads (the ``int8`` payload transform; wire bytes / 4 vs
 fp32).  On TPU the per-stage dequant-accumulate runs through the
-``mrd_combine`` Pallas kernel via the ``device_fused`` executor.
+``mrd_combine`` Pallas kernel via the ``device_fused`` executor.  Like
+``mrd_zero1``, the gradient is bucketed and the RS/AG stages pipeline
+across buckets (DESIGN.md S10); buckets stay 256-block aligned so the
+quantizer never straddles a bucket boundary.
 
 Quantization noise is bounded per stage (see
 ``repro.collectives.transforms``) but uncompensated — error feedback

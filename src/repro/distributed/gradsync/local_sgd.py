@@ -69,12 +69,14 @@ def make(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
 
             def sync(ps):
                 # the paper's collectives: average the replicas across the
-                # whole DP domain with one chained flat RS+AG plan
+                # whole DP domain with a chained RS+AG plan, pipelined over
+                # size-capped param buckets (DESIGN.md S10)
                 avg = plans.tree_allreduce(
                     jax.tree.map(lambda x: x.astype(jnp.float32), ps),
                     schedule="rabenseifner",
                     axes=dp_axes,
                     executor=executor,
+                    bucket_bytes=tcfg.bucket_bytes,
                 )
                 return jax.tree.map(
                     lambda a, b: (a / dp).astype(b.dtype), avg, ps

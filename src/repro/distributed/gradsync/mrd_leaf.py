@@ -1,10 +1,20 @@
-"""Grad-sync strategy ``mrd_leaf``: leaf-wise MRD butterfly gradient
-allreduce (beyond-paper iteration on ``mrd_paper``).
+"""Grad-sync strategy ``mrd_leaf``: bucketed MRD butterfly gradient
+allreduce with a tree-shaped optimizer (beyond-paper iteration on
+``mrd_paper``).
 
-The butterfly runs per gradient leaf, which stays TP-sharded over the
-auto "model" axis — ppermute moves 1/tp of each leaf per device and no
-flatten/reshard collectives appear.  Optimizer: fp32 tree, TP-sharded,
-DP-replicated (memory ~ 16 B/param / tp).
+Historically this mode ran one full schedule cycle *per gradient leaf*,
+paying the per-message alpha cost once per tensor.  It now packs the
+gradient tree into dtype-homogeneous, size-capped buckets and executes
+the butterfly stage-major across them
+(:meth:`repro.collectives.plans.CollectivePlan.run_bucketed`,
+DESIGN.md S10) — leaf dtypes are preserved end-to-end and the per-leaf
+loop is gone.  Trade-off vs the old per-leaf path: packing concatenates
+leaves, so on partial-manual runtimes TP-sharded grads are gathered
+over the auto "model" axis before the DP butterfly (the per-leaf path
+moved 1/tp of each leaf with no reshard); tune ``bucket_bytes`` or
+prefer ``mrd_zero1`` when TP resharding dominates.  Optimizer: fp32
+tree, TP-sharded via param specs, DP-replicated (memory
+~16 B/param / tp).
 """
 
 from __future__ import annotations
@@ -66,8 +76,9 @@ def make(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
                 grads, loss, metrics = common.microbatched_grads(
                     params, local_batch, cfg, remat_policy, tcfg.microbatches
                 )
-            # the paper's butterfly, leaf-wise over TP-sharded grads
-            grads = grad_ar.run(grads)
+            # the paper's butterfly, pipelined over dtype-homogeneous
+            # gradient buckets (stage-major; DESIGN.md S10)
+            grads = grad_ar.run_bucketed(grads, bucket_bytes=tcfg.bucket_bytes)
             grads = jax.tree.map(lambda g: g / dp, grads)
             grads, gnorm = opt_lib.clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
             params, opt = opt_lib.apply_update(

@@ -1,9 +1,13 @@
 """Grad-sync strategy ``mrd_paper``: the paper-faithful collective.
 
-Pure modified-recursive-doubling Allreduce of the full flat gradient
+Pure modified-recursive-doubling Allreduce of the full fp32 gradient
 (paper S2) chained over the DP axes + a replicated optimizer; no RS/AG,
-no optimizer-state sharding.  This is the reference the beyond-paper
-modes (``mrd_zero1``, ``compressed``) are measured against.
+no optimizer-state sharding.  The gradient travels in size-capped buckets
+executed stage-major (``repro.collectives.buckets`` +
+:meth:`repro.collectives.plans.CollectivePlan.run_buffers`, DESIGN.md
+S10) rather than as one monolithic flat vector.  This is the reference
+the beyond-paper modes (``mrd_zero1``, ``compressed``) are measured
+against.
 """
 
 from __future__ import annotations

@@ -1,12 +1,16 @@
 """Grad-sync strategy ``mrd_zero1``: the paper's butterfly as a ZeRO-1
 distributed optimizer (beyond-paper).
 
-Inside ``shard_map`` (manual over the DP axes, auto over "model"): chained
-recursive-halving **reduce-scatter** of the flat fp32 gradient over each DP
-axis, shard-local AdamW on the fp32 master shard, then chained
-recursive-doubling **all-gather** of the bf16 params.  Works for
-non-power-of-two DP groups (the paper's headline case) — the elasticity
-path uses exactly this.  Hierarchy is implicit: with mesh axes
+Inside ``shard_map`` (manual over the DP axes, auto over "model"): the
+flat fp32 gradient is packed into size-capped buckets
+(:mod:`repro.collectives.buckets`), each bucket reduce-scattered over the
+DP axes with the recursive-halving schedule **stage-major across buckets**
+(:meth:`repro.collectives.plans.CollectivePlan.run_buffers`, DESIGN.md
+S10) so collective-permute overlaps neighbouring buckets' compute;
+shard-local AdamW runs on the concatenated per-bucket fp32 segments, then
+the bf16 params all-gather back per bucket on the same pipelined path.
+Works for non-power-of-two DP groups (the paper's headline case) — the
+elasticity path uses exactly this.  Hierarchy is implicit: with mesh axes
 ("pod","data"), the chained RS/AG reduces inter-pod bytes by 1/p0(data).
 
 All collectives run through :class:`repro.collectives.plans.CollectivePlan`;
@@ -16,15 +20,16 @@ schedule/transform binding.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
-import jax.flatten_util
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.collectives import plans
+from repro.collectives import buckets, plans
 from repro.collectives.schedules import pivot
 from repro.distributed import sharding as shd
 from repro.distributed.gradsync import common, register
@@ -35,15 +40,79 @@ from repro.models.layers import dtype_of
 from repro.optim import optimizer as opt_lib
 
 
-def zero1_shard_len(n_params: int, mesh: Mesh, dp_axes, block: int = 256) -> tuple[int, int]:
-    """(padded_total, shard_len) for the chained RS over dp_axes."""
+def zero1_prod_p0(mesh: Mesh, dp_axes) -> int:
+    """Product of the per-axis pivot sizes (live RS segment count)."""
     prod_p0 = 1
     for ax in dp_axes:
         p0, _, _ = pivot(mesh.shape[ax])
         prod_p0 *= p0
+    return prod_p0
+
+
+def zero1_shard_len(n_params: int, mesh: Mesh, dp_axes, block: int = 256) -> tuple[int, int]:
+    """(padded_total, shard_len) for a *single-bucket* chained RS over
+    dp_axes (legacy flat layout; the bucketed layout generalizes this
+    per bucket — see :func:`zero1_layout`)."""
+    prod_p0 = zero1_prod_p0(mesh, dp_axes)
     quantum = prod_p0 * block
     padded = ((n_params + quantum - 1) // quantum) * quantum
     return padded, padded // prod_p0
+
+
+def zero1_layout(
+    pshape,
+    mesh: Mesh,
+    dp_axes,
+    *,
+    bucket_bytes: Optional[int] = buckets.DEFAULT_BUCKET_BYTES,
+    block: int = 256,
+) -> tuple[buckets.BucketLayout, int]:
+    """(bucket layout, prod_p0) for the bucketed chained RS over dp_axes.
+
+    The layout is built over the fp32 view of ``pshape`` (gradients are
+    accumulated in fp32); every bucket is padded to ``prod_p0 * block``
+    elements so each RS phase divides evenly and int8 blocks stay aligned.
+    Master/moment rows are the per-bucket owned segments concatenated in
+    bucket order — total shard length ``layout.total_padded / prod_p0``.
+    """
+    prod_p0 = zero1_prod_p0(mesh, dp_axes)
+    fp32 = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(tuple(l.shape), jnp.float32), pshape
+    )
+    layout = buckets.build_layout(
+        fp32, bucket_bytes=bucket_bytes, quantum=prod_p0 * block
+    )
+    return layout, prod_p0
+
+
+def zero1_masters_from_params(
+    params,
+    mesh: Mesh,
+    dp_axes,
+    *,
+    bucket_bytes: Optional[int] = buckets.DEFAULT_BUCKET_BYTES,
+    paper_mode: bool = False,
+) -> jnp.ndarray:
+    """``[dp, m]`` fp32 master rows matching :func:`make_zero1`'s bucketed
+    shard layout — the elastic restart path re-seeds masters from restored
+    params with exactly this (tests/test_fault_tolerance.py)."""
+    layout, prod_p0 = zero1_layout(params, mesh, dp_axes, bucket_bytes=bucket_bytes)
+    bufs = buckets.pack(
+        jax.tree.map(lambda x: x.astype(jnp.float32), params), layout
+    )
+    dp = int(np.prod([mesh.shape[ax] for ax in dp_axes]))
+    if paper_mode:
+        flat = jnp.concatenate(bufs) if bufs else jnp.zeros((0,), jnp.float32)
+        return jnp.broadcast_to(flat, (dp, flat.shape[0]))
+    owners = zero1_owner_segments(mesh, dp_axes)
+    seg_bufs = [b.reshape(prod_p0, -1) for b in bufs]
+    m = layout.total_padded // prod_p0
+    rows = [
+        jnp.concatenate([sb[o] for sb in seg_bufs]) if o is not None
+        else jnp.zeros((m,), jnp.float32)
+        for o in owners
+    ]
+    return jnp.stack(rows)
 
 
 def zero1_owner_segments(mesh: Mesh, dp_axes) -> list:
@@ -73,12 +142,15 @@ def make_zero1(
     transform: str = "identity",
     paper_mode: bool = False,
 ):
-    """Shared builder for the flat-gradient MRD strategies.
+    """Shared builder for the bucketed flat-gradient MRD strategies.
 
     Params: TP-sharded (auto "model" axis), replicated across DP (manual).
-    Opt state: flat fp32 shards owned per DP rank, global shape [dp, m]
+    Opt state: fp32 shards owned per DP rank, global shape [dp, m] — ``m``
+    concatenates the owned segment of every gradient bucket
     (``paper_mode``: every rank owns a full replica, pure RD-butterfly
-    allreduce — the paper's S2 collective — and no RS/AG).
+    allreduce — the paper's S2 collective — and no RS/AG).  All
+    gradient-scale collectives run per-bucket, pipelined stage-major
+    (DESIGN.md S10).
     Global grad-norm clipping uses the paper's MRD allreduce on the scalar.
     """
     rules = shd.make_rules(cfg, mesh, fsdp=False)  # DP-replicated params
@@ -89,35 +161,37 @@ def make_zero1(
     dp = rules.dp
     monitor = common.build_monitor(tcfg, rules)
 
-    # the plan bindings: one code path for plain/compressed, 1/N axes
-    rs_plan = plans.reduce_scatter_plan(
-        axes=dp_axes, op="sum", transform=transform, executor=executor
-    )
-    ag_plan = plans.allgather_plan(axes=dp_axes, executor=executor)
-    scalar_ar = plans.allreduce_plan(schedule="mrd", axes=dp_axes, op="sum")
+    # the plan bindings: one code path for plain/compressed, 1/N axes.
+    # paper_mode allreduces full buckets; the ZeRO-1 path reduce-scatters
+    # them, allreduces the grad-norm scalar, and all-gathers the params.
+    if paper_mode:
+        full_ar = plans.allreduce_plan(
+            schedule="mrd", axes=dp_axes, op="sum", transform=transform,
+            executor=executor,
+        )
+    else:
+        rs_plan = plans.reduce_scatter_plan(
+            axes=dp_axes, op="sum", transform=transform, executor=executor
+        )
+        ag_plan = plans.allgather_plan(axes=dp_axes, executor=executor)
+        scalar_ar = plans.allreduce_plan(schedule="mrd", axes=dp_axes, op="sum")
 
     pshape = jax.eval_shape(lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
-    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pshape))
-    padded, shard_len = zero1_shard_len(n_params, mesh, dp_axes)
-    if paper_mode:
-        shard_len = padded  # every rank owns (a replica of) the full vector
-    owners = zero1_owner_segments(mesh, dp_axes)
+    layout, prod_p0 = zero1_layout(
+        pshape, mesh, dp_axes, bucket_bytes=tcfg.bucket_bytes
+    )
+    padded = layout.total_padded
+    shard_len = padded if paper_mode else padded // prod_p0
+    # per-bucket split points of the concatenated shard / full vector
+    full_bounds = list(np.cumsum(layout.bucket_lengths)[:-1])
+    shard_bounds = [b // prod_p0 for b in full_bounds]
 
     def init_state(key):
         params = transformer.init_params(cfg, key)
-        flat, _ = jax.flatten_util.ravel_pytree(
-            jax.tree.map(lambda x: x.astype(jnp.float32), params)
+        masters = zero1_masters_from_params(
+            params, mesh, dp_axes,
+            bucket_bytes=tcfg.bucket_bytes, paper_mode=paper_mode,
         )
-        flat = jnp.pad(flat, (0, padded - flat.shape[0]))
-        if paper_mode:
-            masters = jnp.broadcast_to(flat, (dp, shard_len))
-        else:
-            segs = flat.reshape(-1, shard_len)  # [prod_p0, m]
-            rows = [
-                segs[o] if o is not None else jnp.zeros((shard_len,), jnp.float32)
-                for o in owners
-            ]
-            masters = jnp.stack(rows)  # [dp, m]
         state = {
             "params": params,
             "opt": {
@@ -152,26 +226,26 @@ def make_zero1(
         return ok
 
     def train_step(state, batch):
-        _, unravel = jax.flatten_util.ravel_pytree(
-            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), pshape)
-        )
-
         def local_step(params, opt, step, mon_state, local_batch):
             with shd.sharding_ctx(cfg, common.manual_rules(rules)):
                 grads, loss, metrics = common.microbatched_grads(
                     params, local_batch, cfg, remat_policy, tcfg.microbatches
                 )
-            flat, _ = jax.flatten_util.ravel_pytree(
-                jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            # dtype-homogeneous, quantum-padded gradient buckets
+            bufs = buckets.pack(
+                jax.tree.map(lambda g: g.astype(jnp.float32), grads), layout
             )
-            flat = jnp.pad(flat, (0, padded - flat.shape[0]))
             if paper_mode:
-                # the paper's Allreduce: full-buffer XOR butterfly per DP axis
-                gshard = scalar_ar.run(flat) / dp
+                # the paper's Allreduce: full-buffer XOR butterfly per DP
+                # axis, pipelined stage-major across buckets
+                red = full_ar.run_buffers(bufs)
+                gshard = jnp.concatenate(red) / dp
                 gnorm = jnp.sqrt(jnp.sum(gshard * gshard))
             else:
-                # beyond-paper: chained RS over DP axes -> mean segment
-                gshard = rs_plan.run(flat) / dp
+                # beyond-paper: chained RS over DP axes, one pipelined
+                # pass over all buckets -> concatenated mean segments
+                shards = rs_plan.run_buffers(bufs)
+                gshard = jnp.concatenate(shards) / dp
                 # global grad norm via the paper's MRD allreduce on a scalar
                 own = _is_owner()
                 sq = jnp.where(own, jnp.sum(gshard * gshard), 0.0)
@@ -188,11 +262,15 @@ def make_zero1(
                 step,
             )
             if paper_mode:
-                new_flat = master.astype(pdt)  # already full-length
+                out_bufs = jnp.split(master.astype(pdt), full_bounds)
             else:
-                # recursive-doubling all-gather of updated bf16 params
-                new_flat = ag_plan.run(master.astype(pdt))
-            new_params = unravel(new_flat[:n_params].astype(jnp.float32))
+                # recursive-doubling all-gather of the updated bf16 params,
+                # again pipelined per bucket
+                out_bufs = ag_plan.run_buffers(
+                    jnp.split(master.astype(pdt), shard_bounds)
+                )
+            # unpack casts each bucket back to its layout dtype (fp32)
+            new_params = buckets.unpack(out_bufs, layout)
             new_params = jax.tree.map(
                 lambda a, b: a.astype(b.dtype), new_params, params
             )

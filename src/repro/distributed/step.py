@@ -36,6 +36,8 @@ from repro.distributed.gradsync.common import (  # noqa: F401
     microbatched_grads as _microbatched_grads,
 )
 from repro.distributed.gradsync.mrd_zero1 import (  # noqa: F401
+    zero1_layout,
+    zero1_masters_from_params,
     zero1_owner_segments,
     zero1_shard_len,
 )

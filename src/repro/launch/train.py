@@ -59,6 +59,9 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--bucket-bytes", type=int, default=32 * 2**20,
+                    help="cap per gradient bucket for the pipelined "
+                         "collective engine (0 = one bucket per dtype)")
     args = ap.parse_args(argv)
 
     cfg = (
@@ -72,6 +75,7 @@ def main(argv=None):
         monitor=args.monitor_threshold > 0,
         monitor_mode=args.monitor_mode,
         monitor_threshold=args.monitor_threshold,
+        bucket_bytes=args.bucket_bytes or None,
         optimizer=OptimizerConfig(
             lr=args.lr, schedule=args.schedule,
             warmup_steps=min(20, args.steps // 10),

@@ -109,19 +109,11 @@ _ELASTIC = textwrap.dedent(
         state3 = init3(jax.random.PRNGKey(0))
         state3["params"] = full["params"]
         state3["step"] = jnp.asarray(full["step"])
-        # re-seed masters from restored params (flat repack for dp=3)
-        state3 = init_from_params = state3
-        # recompute flat masters
-        flat, _ = jax.flatten_util.ravel_pytree(
-            jax.tree.map(lambda x: x.astype(jnp.float32), full["params"]))
-        from repro.distributed.step import zero1_shard_len, zero1_owner_segments
-        padded, m = zero1_shard_len(
-            sum(int(np.prod(l.shape)) for l in jax.tree.leaves(full["params"])),
-            mesh3, ("data",))
-        flatp = jnp.pad(flat, (0, padded - flat.shape[0])).reshape(-1, m)
-        rows = [flatp[o] if o is not None else jnp.zeros((m,), jnp.float32)
-                for o in zero1_owner_segments(mesh3, ("data",))]
-        state3["opt"]["master"] = jnp.stack(rows)
+        # re-seed masters from restored params (bucketed repack for dp=3,
+        # matching make_zero1's shard layout)
+        from repro.distributed.step import zero1_masters_from_params
+        state3["opt"]["master"] = zero1_masters_from_params(
+            full["params"], mesh3, ("data",), bucket_bytes=tcfg.bucket_bytes)
         state3 = jax.device_put(state3, shardings)
 
         pipe3 = SyntheticPipeline(cfg, DataConfig(batch=12, seq_len=32, seed=0), mesh3)

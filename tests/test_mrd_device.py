@@ -70,6 +70,21 @@ _SCRIPT = textwrap.dedent(
     np.testing.assert_allclose(np.asarray(dev["b"][3]), np.asarray(tree["b"].sum(0)), rtol=1e-4)
     print("tree-flat OK")
 
+    # --- multi-bucket pipelined path on device == sim, bit-for-bit ---
+    from repro.collectives import plans as plan_lib
+    for schedule in ["mrd", "rabenseifner"]:
+        dev_out = jax.jit(shard_map(
+            lambda t: jax.tree.map(
+                lambda l: l[None],
+                mrd.tree_allreduce_flat(jax.tree.map(lambda l: l[0], t), "r",
+                                        schedule=schedule, bucket_bytes=16)),
+            mesh=mesh, in_specs=P("r"), out_specs=P("r")))(tree)
+        sim_out = plan_lib.tree_allreduce(tree, schedule=schedule, p=p,
+                                          bucket_bytes=16)
+        for kd, ks in zip(jax.tree.leaves(dev_out), jax.tree.leaves(sim_out)):
+            assert np.array_equal(np.asarray(kd), np.asarray(ks)), schedule
+    print("tree-bucketed device==sim OK")
+
     # --- hierarchical allreduce over a 2D mesh (pod-aware) ---
     mesh2 = compat.make_mesh((2, 4), ("pod", "data"), devices=jax.devices()[:8],
                           axis_types=compat.default_axis_types(2))

@@ -24,13 +24,14 @@ _SCRIPT = textwrap.dedent(
 
     cfg = registry.get_smoke_config("llama3.2-1b")
 
-    def run_mode(mesh_shape, axis_names, grad_sync, steps=6, monitor=True, ndev=8):
+    def run_mode(mesh_shape, axis_names, grad_sync, steps=6, monitor=True, ndev=8,
+                 bucket_bytes=32 * 2**20):
         mesh = compat.make_mesh(mesh_shape, axis_names,
                                 devices=jax.devices()[:ndev],
                                 axis_types=compat.default_axis_types(len(axis_names)))
         tcfg = step_lib.TrainConfig(
             microbatches=2, remat="none", grad_sync=grad_sync, monitor=monitor,
-            monitor_threshold=1e-6,
+            monitor_threshold=1e-6, bucket_bytes=bucket_bytes,
             optimizer=OptimizerConfig(lr=1e-2, schedule="const", warmup_steps=0,
                                       grad_clip=1.0),
         )
@@ -54,8 +55,10 @@ _SCRIPT = textwrap.dedent(
     assert l_gspmd[-1] < l_gspmd[0], f"gspmd loss: {l_gspmd}"
     print("gspmd OK", [round(x,3) for x in l_gspmd])
 
-    # --- 2. MRD-ZeRO-1: matches gspmd step-for-step (same math) ---
-    l_mrd, st_m, _ = run_mode((4, 2), ("data", "model"), "mrd_zero1")
+    # --- 2. MRD-ZeRO-1: matches gspmd step-for-step (same math).  A small
+    # bucket cap forces the multi-bucket pipelined RS/AG path. ---
+    l_mrd, st_m, _ = run_mode((4, 2), ("data", "model"), "mrd_zero1",
+                              bucket_bytes=1 << 15)
     np.testing.assert_allclose(l_gspmd, l_mrd, rtol=2e-2, atol=2e-2)
     print("mrd_zero1 == gspmd OK", [round(x,3) for x in l_mrd])
 
