@@ -1,0 +1,133 @@
+"""Asynchrony-runtime sweep: delay model x detection protocol on the
+paper's 1-D BVP relaxation (``repro.asynchrony``, DESIGN.md S11).
+
+For every registered delay model, every realizable protocol is compared
+against the ``oracle`` baseline (the physically-unrealizable true residual
+of the live iterate) on the same seeds, via ONE vmapped ``sweep()``
+dispatch per (model, protocol) pair:
+
+- **detection delay**: mean extra ticks past the oracle's stopping tick —
+  the price of a realizable protocol in that environment;
+- **message counts**: point-to-point + collective (paper S2 accounting);
+- **soundness**: worst certified-vs-true residual across the seeds.
+
+CSV on stdout: name,us_per_call,derived
+JSON: writes BENCH_async.json (schema: {"sweep": [...], "meta": {...}}) so
+the detection-delay trajectory is machine-readable across PRs.
+
+``--quick`` reduces seeds/models for the CI smoke (row names are a subset
+of the full run's).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.asynchrony import (
+    DELAY_MODELS,
+    AsyncConfig,
+    make_solver,
+    sweep,
+)
+from repro.configs.paper_poisson1d import CONFIG as PAPER
+
+PROTOCOLS = ("sync", "inexact", "exact", "interval")  # vs 'oracle' baseline
+
+
+def run_sweeps(n: int, p: int, seeds, models, eps: float):
+    fp = make_solver("poisson1d", n=n, omega=1.0, shift=PAPER.shift, seed=0)
+    rows = []
+    for model in models:
+        def cfg_for(det):
+            return AsyncConfig(
+                p=p, detection=det, delay_model=model, eps=eps,
+                max_ticks=60000, max_delay=PAPER.max_delay,
+                activity=PAPER.activity,
+            )
+
+        t0 = time.perf_counter()
+        oracle = sweep(fp, cfg_for("oracle"), seeds)
+        oracle_us = (time.perf_counter() - t0) / len(seeds) * 1e6
+        if not oracle.detected.all():
+            # budget-capped baseline: delay deltas would be meaningless
+            rows.append({
+                "name": f"async_{model}_oracle_ticks_p{p}",
+                "model": model, "protocol": "oracle", "p": p,
+                "us_per_call": round(oracle_us, 1), "undetected": True,
+            })
+            continue
+        base_ticks = oracle.ticks.astype(np.float64)
+        rows.append({
+            "name": f"async_{model}_oracle_ticks_p{p}",
+            "model": model, "protocol": "oracle", "p": p,
+            "us_per_call": round(oracle_us, 1),
+            "mean_ticks": round(float(base_ticks.mean()), 1),
+            "detection_delay_ticks": 0.0,
+            "messages_p2p": int(oracle.messages_p2p.mean()),
+            "messages_coll": int(oracle.messages_coll.mean()),
+            "worst_true_res": float(oracle.true_res.max()),
+        })
+        for det in PROTOCOLS:
+            t0 = time.perf_counter()
+            r = sweep(fp, cfg_for(det), seeds)
+            us = (time.perf_counter() - t0) / len(seeds) * 1e6
+            if not r.detected.all():
+                rows.append({
+                    "name": f"async_{model}_{det}_ticks_p{p}",
+                    "model": model, "protocol": det, "p": p,
+                    "us_per_call": round(us, 1), "undetected": True,
+                })
+                continue
+            delay = float((r.ticks.astype(np.float64) - base_ticks).mean())
+            rows.append({
+                "name": f"async_{model}_{det}_ticks_p{p}",
+                "model": model, "protocol": det, "p": p,
+                "us_per_call": round(us, 1),
+                "mean_ticks": round(float(r.ticks.mean()), 1),
+                # 'sync' runs a different (delay-free) environment, so its
+                # delta vs the async oracle is an environment gap, not a
+                # detection delay — still the paper's Fig. 5 comparison
+                "detection_delay_ticks": round(delay, 1),
+                "messages_p2p": int(r.messages_p2p.mean()),
+                "messages_coll": int(r.messages_coll.mean()),
+                "worst_true_res": float(r.true_res.max()),
+            })
+    return rows
+
+
+def main(json_path: str = "BENCH_async.json", quick: bool = False):
+    n = 256 if quick else 512
+    p = 4 if quick else 8
+    n_seeds = 4 if quick else 16
+    models = ("bernoulli", "straggler") if quick else tuple(sorted(DELAY_MODELS))
+    eps = PAPER.eps
+    seeds = jnp.arange(n_seeds)
+
+    rows = run_sweeps(n, p, seeds, models, eps)
+    for r in rows:
+        derived = r.get("detection_delay_ticks", "undetected")
+        print(f"{r['name']},{r['us_per_call']},{derived}")
+    payload = {
+        "meta": {"n": n, "p": p, "seeds": n_seeds, "eps": eps,
+                 "quick": quick, "baseline": "oracle"},
+        "sweep": rows,
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {json_path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_async.json", help="output JSON path")
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="reduced sweep (CI smoke): fewer models, seeds, smaller problem",
+    )
+    args = ap.parse_args()
+    main(json_path=args.json, quick=args.quick)

@@ -1,6 +1,6 @@
-"""Paper Fig. 5 analogue: asynchronous vs synchronous iterations of the 1-D
-two-point BVP relaxation in a 'concentrated' environment, with the paper's
-detection protocols.
+"""Paper Fig. 5 analogue on the registry runtime (``repro.asynchrony``):
+asynchronous vs synchronous iterations of the 1-D two-point BVP relaxation
+in a 'concentrated' environment, with the paper's detection protocols.
 
 Reports per p: ticks to detection, per-worker iteration counts, messages
 (point-to-point + collective), certified vs true residual, and the premature-
@@ -9,6 +9,10 @@ stop behavior of the inexact detector.  The paper's qualitative claims:
 synchronous ones (Fig. 5's 'synchronous behavior'); (2) async generates more
 messages; (3) the exact detector certifies a genuine solution, the inexact
 one may stop early but within acceptable precision.
+
+(The delay-model x protocol grid with the oracle baseline lives in
+``benchmarks/bench_async.py``; this file keeps the historical Fig. 5 row
+names for trend lines.)
 
 CSV: name,us_per_call,derived
 """
@@ -19,19 +23,18 @@ import time
 
 import numpy as np
 
-from repro.core import async_engine as ae
-from repro.core import solvers
+from repro.asynchrony import AsyncConfig, make_solver, run
 from repro.configs.paper_poisson1d import CONFIG as PAPER
 
 
 def run_one(p, mode, n=1024, eps=1e-5, seed=0):
-    fp = solvers.poisson_1d(n, omega=1.0, shift=PAPER.shift, seed=seed)
-    cfg = ae.AsyncConfig(
+    fp = make_solver("poisson1d", n=n, omega=1.0, shift=PAPER.shift, seed=seed)
+    cfg = AsyncConfig(
         p=p, detection=mode, eps=eps, max_ticks=60000, seed=seed,
         max_delay=PAPER.max_delay, activity=PAPER.activity,
     )
     t0 = time.perf_counter()
-    res = ae.run(fp, cfg)
+    res = run(fp, cfg)
     wall = (time.perf_counter() - t0) * 1e6
     return res, wall
 
@@ -56,9 +59,9 @@ def main():
             f"{r_exact.kiter.min()}..{r_exact.kiter.max()}",
         ))
     # paper-scale problem (n = 10000): rate snapshot with capped ticks
-    fp = solvers.poisson_1d(10000, omega=1.0, shift=0.0, seed=0)
-    cfg = ae.AsyncConfig(p=16, detection="oracle", eps=1e-30, max_ticks=300)
-    res = ae.run(fp, cfg)
+    fp = make_solver("poisson1d", n=10000, omega=1.0, shift=0.0, seed=0)
+    cfg = AsyncConfig(p=16, detection="oracle", eps=1e-30, max_ticks=300)
+    res = run(fp, cfg)
     rows.append(("paper_n10000_res_after_300_ticks", 0.0, f"{res.res_glb:.4e}"))
     for name, us, derived in rows:
         print(f"{name},{us},{derived}")

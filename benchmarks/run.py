@@ -11,10 +11,17 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import bench_compression, bench_detection, bench_mrd, bench_train_step
+    from benchmarks import (
+        bench_async,
+        bench_compression,
+        bench_detection,
+        bench_mrd,
+        bench_train_step,
+    )
 
     print("name,us_per_call,derived")
-    for mod in (bench_mrd, bench_detection, bench_compression, bench_train_step):
+    for mod in (bench_mrd, bench_detection, bench_async, bench_compression,
+                bench_train_step):
         print(f"# --- {mod.__name__} ---", file=sys.stderr)
         mod.main()
 

@@ -1,34 +1,53 @@
-"""The paper's S4 experiment: asynchronous relaxation of a 1-D two-point
-boundary-value problem, comparing detection protocols and environments.
+"""The paper's S4 experiment on the registry-backed asynchrony runtime
+(``repro.asynchrony``, DESIGN.md S11): asynchronous relaxation of a 1-D
+two-point boundary-value problem, comparing detection protocols
+(``DETECTION_PROTOCOLS``) and delay environments (``DELAY_MODELS``).
 
 Reproduces the Fig. 5 qualitative result: in a 'concentrated' (low-delay)
 environment the asynchronous iteration count tracks the synchronous one,
 while message counts are strictly higher — the regime where the paper
-concludes synchronous iterations remain competitive.
+concludes synchronous iterations remain competitive.  The closing sweep
+shows the new engine's headline: seeds x delay-model parameters batched
+into ONE jitted dispatch via ``sweep()`` (vmapped while_loop) instead of a
+Python loop of runs.
 
 Run:  PYTHONPATH=src python examples/solve_poisson_async.py
 """
 
+import jax.numpy as jnp
+
+from repro.asynchrony import AsyncConfig, make_solver, run, sweep
 from repro.configs.paper_poisson1d import CONFIG as PAPER
-from repro.core import async_engine as ae
-from repro.core import solvers
 
 N = 512  # (paper: 10000 with shift=0 — slow contraction; see bench notes)
 
 print(f"{'p':>3} {'mode':>9} {'ticks':>7} {'iters(min..max)':>16} "
       f"{'msgs':>9} {'certified':>10} {'true res':>10}")
 for p in (2, 4, 8):
-    fp = solvers.poisson_1d(N, omega=1.0, shift=PAPER.shift, seed=0)
-    for mode in ("sync", "exact", "inexact"):
-        cfg = ae.AsyncConfig(
+    fp = make_solver("poisson1d", n=N, omega=1.0, shift=PAPER.shift, seed=0)
+    for mode in ("sync", "exact", "inexact", "interval"):
+        cfg = AsyncConfig(
             p=p, detection=mode, eps=PAPER.eps, max_ticks=60000,
             max_delay=PAPER.max_delay, activity=PAPER.activity, seed=p,
         )
-        r = ae.run(fp, cfg)
+        r = run(fp, cfg)
         print(f"{p:>3} {mode:>9} {r.ticks:>7} "
               f"{str(r.kiter.min()) + '..' + str(r.kiter.max()):>16} "
               f"{r.messages_p2p + r.messages_coll:>9} "
               f"{r.res_glb:>10.2e} {r.true_res:>10.2e}")
 
 print("\nNote: 'exact' certifies ||f(x̄)-x̄|| < eps on a consistent snapshot "
-      "(always true at detection); 'inexact' may stop early (paper Alg. 1).")
+      "(always true at detection); 'inexact' may stop early (paper Alg. 1); "
+      "'interval' certifies a whole window of small updates.")
+
+# --- one-dispatch sweep: seeds x bernoulli activity grid --------------------
+fp = make_solver("poisson1d", n=128, omega=1.0, shift=PAPER.shift, seed=0)
+cfg = AsyncConfig(p=4, detection="exact", eps=PAPER.eps, max_ticks=60000,
+                  max_delay=PAPER.max_delay)
+grid = {"activity": jnp.asarray([0.3, 0.6, 0.95], jnp.float32)}
+sw = sweep(fp, cfg, seeds=jnp.arange(8), delay_params=grid)
+print("\nsweep(): 3 activity levels x 8 seeds in one vmapped dispatch")
+for gi, act in enumerate(grid["activity"]):
+    print(f"  activity={float(act):.2f}: mean ticks {sw.ticks[gi].mean():7.1f}, "
+          f"all certified: {bool(sw.detected[gi].all())}, "
+          f"worst true res {sw.true_res[gi].max():.2e}")

@@ -1,0 +1,45 @@
+"""Registry-backed asynchronous-iterations runtime (DESIGN.md S11).
+
+Mirrors the collectives architecture: four layers, each a registry, one
+engine composing them —
+
+| layer | module | registry |
+|---|---|---|
+| solvers | ``asynchrony/solvers.py`` | ``SOLVERS`` |
+| delay models | ``asynchrony/delay_models.py`` | ``DELAY_MODELS`` |
+| detection protocols | ``asynchrony/protocols.py`` | ``DETECTION_PROTOCOLS`` |
+| engine | ``asynchrony/engine.py`` | composes the three + ``sweep`` |
+
+``repro.core.{async_engine,solvers,detection}`` remain import-compatible
+shims over this package.
+"""
+
+from repro.asynchrony.delay_models import (  # noqa: F401
+    DELAY_MODELS,
+    apply_fairness,
+    get_delay_model,
+    record_trace,
+    register_delay_model,
+)
+from repro.asynchrony.engine import (  # noqa: F401
+    AsyncConfig,
+    AsyncResult,
+    SweepResult,
+    resolve_delay_params,
+    run,
+    sweep,
+)
+from repro.asynchrony.protocols import (  # noqa: F401
+    DETECTION_PROTOCOLS,
+    RES_INIT,
+    ConvergenceMonitor,
+    get_protocol,
+    register_protocol,
+)
+from repro.asynchrony.solvers import (  # noqa: F401
+    SOLVERS,
+    FixedPoint,
+    get_solver,
+    make_solver,
+    register_solver,
+)

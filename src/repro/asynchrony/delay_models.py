@@ -1,0 +1,259 @@
+"""Layer 2 of the asynchrony subsystem: *delay models* (``DELAY_MODELS``).
+
+A delay model decides, per global tick, which workers iterate and how stale
+each worker's view of every other block is — the ``(active, delays)`` pair
+the bounded-delay simulator (paper S1) consumes.  Every model is a frozen
+dataclass registered by name:
+
+- ``default_params(cfg, p)``: the model's parameter pytree (plain jnp
+  scalars/arrays, so :func:`repro.asynchrony.engine.sweep` can ``vmap``
+  whole experiments over a stacked grid of them);
+- ``init_state(p)``: the carried state pytree (empty for memoryless models);
+- ``sample(params, state, tick, key, last_active, *, p, max_delay,
+  force_every)``: one tick's ``(active [p] bool, delays [p, p] int32,
+  state)``.
+
+Every model ends with :func:`apply_fairness`, which enforces the paper's two
+fairness conditions *by construction*: a worker inactive for ``force_every``
+ticks is forced active (first condition: every worker iterates infinitely
+often), and delays are clipped to ``[0, max_delay]`` (second condition:
+bounded retards, tau -> infinity).  Fairness takes precedence over a model's
+own story — e.g. a ``bursty`` outage cannot starve a worker past the bound.
+
+Registered models: ``bernoulli`` (iid activity + uniform delays — the
+original engine behavior), ``straggler`` (a fixed slow subset with
+heavy-tailed delays), ``heterogeneous`` (per-worker activity/delay rates),
+``bursty`` (correlated outage windows), ``trace`` (replay a recorded delay
+matrix; :func:`record_trace` records one from any other model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_fairness(active, delays, tick, last_active, *, max_delay: int, force_every: int):
+    """Clamp any model's raw sample to the paper's fairness conditions."""
+    active = active | (tick - last_active >= force_every)
+    delays = jnp.clip(delays, 0, max_delay).astype(jnp.int32)
+    return active, delays
+
+
+DELAY_MODELS: Dict[str, Any] = {}
+
+
+def register_delay_model(name: str):
+    def deco(cls):
+        DELAY_MODELS[name] = cls()
+        return cls
+
+    return deco
+
+
+def get_delay_model(name: str):
+    try:
+        return DELAY_MODELS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown delay model {name!r}; registered: {sorted(DELAY_MODELS)}"
+        ) from None
+
+
+def _uniform_delays(key, p: int, max_delay: int):
+    return jax.random.randint(key, (p, p), 0, max_delay + 1)
+
+
+@register_delay_model("bernoulli")
+@dataclasses.dataclass(frozen=True)
+class BernoulliModel:
+    """iid Bernoulli activity + iid uniform delays (the original engine)."""
+
+    name: str = "bernoulli"
+
+    def default_params(self, cfg, p: int):
+        return {"activity": jnp.float32(cfg.activity)}
+
+    def init_state(self, p: int):
+        return {}
+
+    def sample(self, params, state, tick, key, last_active, *, p, max_delay, force_every):
+        k_act, k_delay = jax.random.split(key)
+        active = jax.random.bernoulli(k_act, params["activity"], (p,))
+        delays = _uniform_delays(k_delay, p, max_delay)
+        active, delays = apply_fairness(
+            active, delays, tick, last_active,
+            max_delay=max_delay, force_every=force_every,
+        )
+        return active, delays, state
+
+
+@register_delay_model("straggler")
+@dataclasses.dataclass(frozen=True)
+class StragglerModel:
+    """A fixed slow subset (workers ``0..n_slow-1``) iterates rarely, and
+    *its* blocks reach everyone else with heavy-tailed (truncated-geometric)
+    delays — the classic one-bad-host cluster."""
+
+    name: str = "straggler"
+
+    def default_params(self, cfg, p: int):
+        return {
+            "n_slow": jnp.int32(max(1, p // 4)),
+            "slow_activity": jnp.float32(0.15),
+            "fast_activity": jnp.float32(cfg.activity),
+            # mean of the heavy tail (in ticks), before truncation
+            "tail_scale": jnp.float32(max(1.0, 0.75 * cfg.max_delay)),
+        }
+
+    def init_state(self, p: int):
+        return {}
+
+    def sample(self, params, state, tick, key, last_active, *, p, max_delay, force_every):
+        k_act, k_fast, k_tail = jax.random.split(key, 3)
+        slow = jnp.arange(p) < params["n_slow"]
+        prob = jnp.where(slow, params["slow_activity"], params["fast_activity"])
+        active = jax.random.bernoulli(k_act, prob, (p,))
+        base = _uniform_delays(k_fast, p, max_delay)
+        u = jax.random.uniform(k_tail, (p, p), minval=1e-6, maxval=1.0)
+        heavy = jnp.floor(-params["tail_scale"] * jnp.log(u)).astype(jnp.int32)
+        # column j = staleness of worker j's block as seen by everyone
+        delays = jnp.where(slow[None, :], heavy, base)
+        active, delays = apply_fairness(
+            active, delays, tick, last_active,
+            max_delay=max_delay, force_every=force_every,
+        )
+        return active, delays, state
+
+
+@register_delay_model("heterogeneous")
+@dataclasses.dataclass(frozen=True)
+class HeterogeneousModel:
+    """Per-worker activity rates and per-source delay ceilings — a cluster of
+    unequal hosts (params are length-``p`` arrays, sweepable)."""
+
+    name: str = "heterogeneous"
+
+    def default_params(self, cfg, p: int):
+        return {
+            "activity": jnp.linspace(0.4, 1.0, p, dtype=jnp.float32)
+            * jnp.float32(cfg.activity),
+            "dmax": jnp.linspace(0.0, cfg.max_delay, p, dtype=jnp.float32),
+        }
+
+    def init_state(self, p: int):
+        return {}
+
+    def sample(self, params, state, tick, key, last_active, *, p, max_delay, force_every):
+        k_act, k_delay = jax.random.split(key)
+        active = jax.random.bernoulli(k_act, params["activity"], (p,))
+        u = jax.random.uniform(k_delay, (p, p))
+        # delays[i, j] ~ U{0 .. dmax_j}: source j's network quality
+        delays = jnp.floor(u * (params["dmax"][None, :] + 1.0)).astype(jnp.int32)
+        active, delays = apply_fairness(
+            active, delays, tick, last_active,
+            max_delay=max_delay, force_every=force_every,
+        )
+        return active, delays, state
+
+
+@register_delay_model("bursty")
+@dataclasses.dataclass(frozen=True)
+class BurstyModel:
+    """Correlated outage windows: with rate ``outage_rate`` per tick an
+    outage starts, knocking a random ``affected`` fraction of workers out for
+    ``outage_len`` ticks (inactive, blocks maximally stale).  Carries
+    ``outage_until`` across ticks — the only stateful built-in model."""
+
+    name: str = "bursty"
+
+    def default_params(self, cfg, p: int):
+        return {
+            "activity": jnp.float32(cfg.activity),
+            "outage_rate": jnp.float32(0.05),
+            "outage_len": jnp.float32(3 * cfg.force_every),
+            "affected": jnp.float32(0.5),
+        }
+
+    def init_state(self, p: int):
+        return {"outage_until": jnp.zeros((p,), jnp.int32)}
+
+    def sample(self, params, state, tick, key, last_active, *, p, max_delay, force_every):
+        k_act, k_delay, k_start, k_who = jax.random.split(key, 4)
+        start = jax.random.bernoulli(k_start, params["outage_rate"])
+        who = jax.random.bernoulli(k_who, params["affected"], (p,))
+        until = jnp.where(
+            start & who,
+            tick + params["outage_len"].astype(jnp.int32),
+            state["outage_until"],
+        )
+        out = tick < until
+        active = jax.random.bernoulli(k_act, params["activity"], (p,)) & ~out
+        delays = _uniform_delays(k_delay, p, max_delay)
+        delays = jnp.where(out[None, :], max_delay, delays)
+        # fairness wins over the outage: a starved worker is forced active
+        active, delays = apply_fairness(
+            active, delays, tick, last_active,
+            max_delay=max_delay, force_every=force_every,
+        )
+        return active, delays, {"outage_until": until}
+
+
+_DEFAULT_TRACE_CACHE: dict = {}
+
+
+@register_delay_model("trace")
+@dataclasses.dataclass(frozen=True)
+class TraceModel:
+    """Replay a recorded delay matrix: params are ``{"active": [T, p] bool,
+    "delays": [T, p, p] int32}``, indexed by ``(tick - 1) % T``.  Use
+    :func:`record_trace` to capture a trace from any other model (or load a
+    measured one), making runs exactly reproducible across engines."""
+
+    name: str = "trace"
+
+    def default_params(self, cfg, p: int):
+        # recording is an eager 256-tick Python loop — memoize it so
+        # repeated run()/sweep() calls under the same cfg don't re-record
+        key = (p, cfg.max_delay, cfg.force_every, cfg.activity, cfg.seed)
+        if key not in _DEFAULT_TRACE_CACHE:
+            _DEFAULT_TRACE_CACHE[key] = record_trace(cfg, p, ticks=256)
+        return _DEFAULT_TRACE_CACHE[key]
+
+    def init_state(self, p: int):
+        return {}
+
+    def sample(self, params, state, tick, key, last_active, *, p, max_delay, force_every):
+        idx = jnp.mod(tick - 1, params["active"].shape[0])
+        active = params["active"][idx]
+        delays = params["delays"][idx]
+        active, delays = apply_fairness(
+            active, delays, tick, last_active,
+            max_delay=max_delay, force_every=force_every,
+        )
+        return active, delays, state
+
+
+def record_trace(cfg, p: int, *, ticks: int = 256, source: str = "bernoulli",
+                 source_params=None, seed=None):
+    """Run ``source`` for ``ticks`` ticks and return its fairness-clamped
+    ``(active, delays)`` history as ``trace`` params."""
+    model = get_delay_model(source)
+    params = source_params if source_params is not None else model.default_params(cfg, p)
+    state = model.init_state(p)
+    base = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+    last_active = jnp.zeros((p,), jnp.int32)
+    actives, delays = [], []
+    for t in range(1, ticks + 1):
+        k_model, _ = jax.random.split(jax.random.fold_in(base, t))
+        a, d, state = model.sample(
+            params, state, jnp.int32(t), k_model, last_active,
+            p=p, max_delay=cfg.max_delay, force_every=cfg.force_every,
+        )
+        last_active = jnp.where(a, t, last_active)
+        actives.append(a)
+        delays.append(d)
+    return {"active": jnp.stack(actives), "delays": jnp.stack(delays)}

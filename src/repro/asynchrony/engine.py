@@ -1,0 +1,262 @@
+"""Layer 4 of the asynchrony subsystem: the *engine* — a thin composition of
+solver x delay model x detection protocol (paper S1 + S3).
+
+``p`` virtual workers each own one block of the iterate.  Per global tick:
+
+1. the configured delay model emits ``(active, delays)`` under the paper's
+   two fairness conditions (``repro.asynchrony.delay_models``);
+2. each active worker applies its block map to a *stale view* of the global
+   vector assembled from a ring-buffer history with per-(i,j) delays bounded
+   by ``max_delay``;
+3. the configured detection protocol advances one tick
+   (``repro.asynchrony.protocols``) — the non-blocking MRD Allreduce
+   advances exactly one stage per tick, so communication progresses while
+   workers compute (the point of the paper's statechart).
+
+Everything is a single ``lax.while_loop`` whose carry is a flat pytree of
+arrays, which is what makes :func:`sweep` possible: whole experiments
+``jax.vmap`` over seeds x delay-model parameter grids into **one** jitted
+dispatch (the paper's Fig. 5-style comparisons stop being a Python loop of
+runs).  ``sweep`` is bit-identical to per-seed :func:`run` calls — vmapped
+``while_loop`` lanes freeze once their own predicate clears.
+
+Message accounting follows the paper: point-to-point ``Send(x_i)`` to all
+dependent neighbors (all-to-all assumption) plus per-stage collective
+messages from the schedule, attributed by the protocol.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.asynchrony.delay_models import get_delay_model
+from repro.asynchrony.protocols import RES_INIT, Obs, get_protocol
+from repro.asynchrony.solvers import FixedPoint
+from repro.core import topology
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    p: int
+    max_delay: int = 3
+    activity: float = 0.7
+    force_every: int = 5
+    # any name in repro.asynchrony.DETECTION_PROTOCOLS
+    detection: str = "exact"
+    # any name in repro.asynchrony.DELAY_MODELS
+    delay_model: str = "bernoulli"
+    eps: float = 1e-6
+    max_ticks: int = 20000
+    seed: int = 0
+    window: int = 0  # 'interval' protocol: 0 -> max_delay + 2
+
+
+@dataclasses.dataclass
+class AsyncResult:
+    detected: bool
+    ticks: int  # tick at which the loop stopped (detection or budget)
+    res_glb: float  # detector's certified value at detection
+    true_res: float  # ground-truth ||f(.)-.||_inf of the returned solution
+    kiter: np.ndarray  # per-worker local iteration counts
+    messages_p2p: int
+    messages_coll: int
+    x: np.ndarray  # returned solution (x̄ for 'exact', current x otherwise)
+
+    @property
+    def det_tick(self) -> int:
+        """Deprecated alias of ``ticks`` (they were always equal)."""
+        return self.ticks
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Stacked :class:`AsyncResult` fields: leading axes are ``[S]`` (seeds)
+    or ``[G, S]`` (delay-param grid x seeds)."""
+
+    detected: np.ndarray
+    ticks: np.ndarray
+    res_glb: np.ndarray
+    true_res: np.ndarray
+    kiter: np.ndarray
+    messages_p2p: np.ndarray
+    messages_coll: np.ndarray
+    x: np.ndarray
+
+
+def _stage_message_table(p: int) -> jnp.ndarray:
+    """messages sent at stage s of the MRD allreduce cycle."""
+    sched = topology.allreduce_schedule(p)
+    if not sched:
+        return jnp.zeros((1,), jnp.int32)
+    return jnp.asarray([len(st.pairs) for st in sched], jnp.int32)
+
+
+def _build_core(fp: FixedPoint, cfg: AsyncConfig):
+    """``core(seed, delay_params) -> final carry`` — the one traced function
+    both :func:`run` and :func:`sweep` execute (sweep vmaps it)."""
+    p = cfg.p
+    if fp.n % p:
+        raise ValueError(f"n={fp.n} must be divisible by p={p}")
+    m = fp.n // p
+    H = cfg.max_delay + 2  # ring-buffer depth (delays in [0, max_delay])
+    model = get_delay_model(cfg.delay_model)
+    proto = get_protocol(cfg.detection)
+    msg_table = _stage_message_table(p)
+    coll_cycle_msgs = jnp.int32(topology.paper_message_count(p))
+
+    def cond(c):
+        return (~c["det"]["detected"]) & (c["tick"] < cfg.max_ticks)
+
+    def body(c):
+        tick = c["tick"]
+        key = jax.random.fold_in(c["base_key"], tick)
+        k_model, k_proto = jax.random.split(key)
+
+        if proto.synchronous:
+            active = jnp.ones((p,), jnp.bool_)
+            delays = jnp.zeros((p, p), jnp.int32)
+            dm = c["dm"]
+        else:
+            active, delays, dm = model.sample(
+                c["params"], c["dm"], tick, k_model, c["last_active"],
+                p=p, max_delay=cfg.max_delay, force_every=cfg.force_every,
+            )
+
+        # Assemble stale views: worker i sees block j from `delays[i,j]` ticks
+        # ago (its own block is always current).
+        idx = jnp.mod(tick - 1 - delays, H)  # [p, p]
+        views = c["hist"][idx, jnp.arange(p)[None, :]]  # [p, p, m]
+        views = views.at[jnp.arange(p), jnp.arange(p)].set(c["x"])
+        xnew = fp.block_views_update(views.reshape(p, p * m))  # [p, m]
+
+        x = jnp.where(active[:, None], xnew, c["x"])
+        upd = jnp.max(jnp.abs(x - c["x"]), axis=1)
+        update_mag = jnp.where(active, upd, c["update_mag"])
+        hist = c["hist"].at[jnp.mod(tick, H)].set(x)
+
+        obs = Obs(
+            x=x, update_mag=update_mag, tick=tick, key=k_proto, fp=fp,
+            eps=cfg.eps, max_delay=cfg.max_delay,
+            msg_table=msg_table, coll_cycle_msgs=coll_cycle_msgs,
+        )
+        det, coll_msgs = proto.tick(c["det"], obs)
+
+        n_active = jnp.sum(active.astype(jnp.int32))
+        return {
+            **c,
+            "tick": tick + 1,
+            "x": x,
+            "hist": hist,
+            "update_mag": update_mag,
+            "kiter": c["kiter"] + active.astype(jnp.int32),
+            "last_active": jnp.where(active, tick, c["last_active"]),
+            "dm": dm,
+            "det": det,
+            "messages_p2p": c["messages_p2p"] + n_active * (p - 1),
+            "messages_coll": c["messages_coll"] + coll_msgs,
+        }
+
+    def core(seed, delay_params):
+        x0 = jnp.zeros((p, m), jnp.float32)
+        carry = {
+            "tick": jnp.ones((), jnp.int32),
+            "base_key": jax.random.PRNGKey(seed),
+            "params": delay_params,
+            "x": x0,
+            "hist": jnp.broadcast_to(x0, (H, p, m)).astype(jnp.float32),
+            "update_mag": jnp.full((p,), RES_INIT, jnp.float32),
+            "kiter": jnp.zeros((p,), jnp.int32),
+            "last_active": jnp.zeros((p,), jnp.int32),
+            "dm": model.init_state(p),
+            "det": proto.init(p, m, cfg),
+            "messages_p2p": jnp.zeros((), jnp.int32),
+            "messages_coll": jnp.zeros((), jnp.int32),
+        }
+        return jax.lax.while_loop(cond, body, carry)
+
+    return core, proto, model
+
+
+def resolve_delay_params(fp: FixedPoint, cfg: AsyncConfig, delay_params=None):
+    """The delay-model parameter pytree a run will use (model defaults
+    unless overridden)."""
+    model = get_delay_model(cfg.delay_model)
+    if delay_params is None:
+        return model.default_params(cfg, cfg.p)
+    return delay_params
+
+
+def run(fp: FixedPoint, cfg: AsyncConfig, *, delay_params=None) -> AsyncResult:
+    """One asynchronous solve under ``cfg`` (blocking; jitted while_loop)."""
+    core, proto, _ = _build_core(fp, cfg)
+    params = resolve_delay_params(fp, cfg, delay_params)
+    final = jax.jit(core)(jnp.int32(cfg.seed), params)
+
+    x_out = np.asarray(proto.finalize(final["det"], final["x"]))
+    true_res = float(fp.residual_norm(jnp.asarray(x_out)))
+    return AsyncResult(
+        detected=bool(final["det"]["detected"]),
+        ticks=int(final["tick"]) - 1,
+        res_glb=float(final["det"]["res_norm"]),
+        true_res=true_res,
+        kiter=np.asarray(final["kiter"]),
+        messages_p2p=int(final["messages_p2p"]),
+        messages_coll=int(final["messages_coll"]),
+        x=x_out,
+    )
+
+
+def sweep(
+    fp: FixedPoint,
+    cfg: AsyncConfig,
+    seeds,
+    *,
+    delay_params=None,
+) -> SweepResult:
+    """Batch of solves in **one** jitted dispatch.
+
+    ``seeds``: ``[S]`` ints — vmapped over.  ``delay_params``: optional
+    pytree whose leaves carry a leading grid axis ``[G, ...]`` (stack the
+    per-point parameter pytrees of ``cfg.delay_model``); when given, the
+    result axes are ``[G, S]``.  Per lane the math is exactly :func:`run`
+    (vmapped ``while_loop`` lanes freeze once their own predicate clears),
+    so results are bit-identical to per-seed ``run`` calls — tested for the
+    ``bernoulli`` model.
+    """
+    seeds = jnp.asarray(seeds, jnp.int32)
+    core, proto, _ = _build_core(fp, cfg)
+
+    if delay_params is None:
+        params = resolve_delay_params(fp, cfg)
+        batched = jax.vmap(core, in_axes=(0, None))
+        final = jax.jit(batched)(seeds, params)
+        nbatch = 1
+    else:
+        over_seeds = jax.vmap(core, in_axes=(0, None))
+        over_grid = jax.vmap(lambda prm, s: over_seeds(s, prm), in_axes=(0, None))
+        final = jax.jit(over_grid)(delay_params, seeds)
+        nbatch = 2
+
+    fin = proto.finalize
+    res = jax.vmap(fp.residual_norm)
+    for _ in range(nbatch - 1):
+        fin = jax.vmap(fin)
+        res = jax.vmap(res)
+    xs = jax.vmap(fin)(final["det"], final["x"])
+    true_res = res(xs)
+
+    return SweepResult(
+        detected=np.asarray(final["det"]["detected"]),
+        ticks=np.asarray(final["tick"]) - 1,
+        res_glb=np.asarray(final["det"]["res_norm"]),
+        true_res=np.asarray(true_res),
+        kiter=np.asarray(final["kiter"]),
+        messages_p2p=np.asarray(final["messages_p2p"]),
+        messages_coll=np.asarray(final["messages_coll"]),
+        x=np.asarray(xs),
+    )

@@ -1,0 +1,316 @@
+"""Layer 1 of the asynchrony subsystem: fixed-point *solvers* (``SOLVERS``).
+
+The paper's setting: ``Ax = b``, splitting ``A = M - N``, iteration
+``x <- Tx + c`` with ``T = M^{-1}N``.  The engine (``repro.asynchrony.engine``)
+only needs the fixed-point map ``f`` and a block partitioning; every solver
+here is a registered factory ``SOLVERS[name](**kwargs) -> FixedPoint`` so
+examples, benchmarks, and sweeps select workloads by name exactly like
+schedules/executors/transforms in ``repro.collectives``:
+
+- ``poisson1d`` — the paper's S4 experiment (1-D two-point BVP, finite
+  differences, weighted Jacobi).
+- ``poisson2d`` — 5-point Laplacian on an ``nx x ny`` grid (the natural
+  next-dimension workload; same Jacobi splitting).
+- ``jacobi_dense`` / ``richardson`` — dense variants for tests (default to
+  a random strictly diagonally dominant system).
+- ``d_iteration`` — sparse diffusion fixed point (Hong & Mathieu,
+  arXiv:1301.3007 / arXiv:1202.3108): ``f(x) = d·P x + (1-d)·v`` with a
+  column-stochastic ``P``; contraction factor is the damping ``d`` itself,
+  so it is asynchronously convergent for any ``d < 1``.  The PageRank-style
+  example config lives in ``repro.configs.pagerank_diffusion``.
+
+Asynchronous convergence requires rho(|T|) < 1 (contraction in a weighted max
+norm [4,2]); ``spectral_radius_abs_T`` estimates it for test matrices, and
+``FixedPoint.contraction`` carries the model-derived factor the protocol
+soundness tests bound certified residuals with.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPoint:
+    """A fixed-point problem f(x) = x partitioned into p equal blocks.
+
+    ``contraction``: an upper bound on rho(|T|) when the constructor knows
+    one (None otherwise) — the model-derived quantity protocol soundness
+    bounds are stated against.
+    """
+
+    n: int
+    full_map: Callable  # [n] -> [n], the map f
+    name: str = "fixed-point"
+    contraction: Optional[float] = None
+
+    def residual_norm(self, x):
+        """||f(x) - x||_inf — the paper's termination functional."""
+        return jnp.max(jnp.abs(self.full_map(x) - x))
+
+    def block_views_update(self, views):
+        """views: [p, n] (worker i's possibly-stale global view).
+        Returns [p, m]: worker i's new block = f(view_i) restricted to block i."""
+        p = views.shape[0]
+        m = self.n // p
+        full = jax.vmap(self.full_map)(views)  # [p, n]
+        return full.reshape(p, p, m)[jnp.arange(p), jnp.arange(p)]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+SOLVERS: Dict[str, Callable[..., FixedPoint]] = {}
+
+
+def register_solver(name: str):
+    """Decorator: register a ``(**kwargs) -> FixedPoint`` factory."""
+
+    def deco(fn: Callable[..., FixedPoint]) -> Callable[..., FixedPoint]:
+        SOLVERS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_solver(name: str) -> Callable[..., FixedPoint]:
+    try:
+        return SOLVERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown solver {name!r}; registered: {sorted(SOLVERS)}"
+        ) from None
+
+
+def make_solver(name: str, **kwargs) -> FixedPoint:
+    return get_solver(name)(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# The paper's S4 problem + dense test variants
+# ---------------------------------------------------------------------------
+
+
+@register_solver("poisson1d")
+def poisson_1d(
+    n: int,
+    *,
+    omega: float = 1.0,
+    shift: float = 0.0,
+    rhs: jnp.ndarray | None = None,
+    seed: int = 0,
+    rhs_scale: float = 10.0,
+) -> FixedPoint:
+    """The paper's S4 problem: 1-D two-point BVP, finite differences.
+
+    A = tridiag(-1, 2+shift, -1) (n x n), b ~ U[-rhs_scale, rhs_scale] (paper:
+    n = 10000, b in [-10, 10], shift = 0).  Weighted-Jacobi fixed point:
+    ``f(x) = x + (omega/diag) * (b - Ax)``.  ``shift > 0`` makes A strictly
+    diagonally dominant (rho(|T|) <= 2/(2+shift) < 1), giving fast asynchronous
+    contraction for protocol benchmarks; shift = 0 is the paper's exact (slow,
+    rho ~ 1 - O(1/n^2)) problem.
+    """
+    if rhs is None:
+        rhs = jax.random.uniform(
+            jax.random.PRNGKey(seed), (n,), minval=-rhs_scale, maxval=rhs_scale
+        )
+    diag = 2.0 + shift
+
+    def apply_A(x):
+        up = jnp.concatenate([x[1:], jnp.zeros((1,), x.dtype)])
+        down = jnp.concatenate([jnp.zeros((1,), x.dtype), x[:-1]])
+        return diag * x - up - down
+
+    def f(x):
+        return x + (omega / diag) * (rhs - apply_A(x))
+
+    contraction = min(2.0 / (2.0 + shift), 1.0) if omega == 1.0 else None
+    return FixedPoint(
+        n=n,
+        full_map=f,
+        name=f"poisson1d(n={n},omega={omega},shift={shift})",
+        contraction=contraction,
+    )
+
+
+@register_solver("poisson2d")
+def poisson_2d(
+    nx: int,
+    ny: Optional[int] = None,
+    *,
+    omega: float = 1.0,
+    shift: float = 0.0,
+    seed: int = 0,
+    rhs_scale: float = 10.0,
+) -> FixedPoint:
+    """2-D Poisson: 5-point Laplacian on an ``nx x ny`` grid, weighted Jacobi.
+
+    A = diag(4+shift) - (N/S/E/W neighbors); the flat iterate is the
+    row-major raveling of the grid, so a ``p``-block partition hands each
+    worker a band of grid rows.  rho(|T|) <= 4/(4+shift).
+    """
+    ny = nx if ny is None else ny
+    n = nx * ny
+    rhs = jax.random.uniform(
+        jax.random.PRNGKey(seed), (n,), minval=-rhs_scale, maxval=rhs_scale
+    )
+    diag = 4.0 + shift
+
+    def f(x):
+        g = x.reshape(nx, ny)
+        z = jnp.zeros_like(g)
+        nbrs = (
+            jnp.concatenate([g[1:], z[:1]], axis=0)
+            + jnp.concatenate([z[:1], g[:-1]], axis=0)
+            + jnp.concatenate([g[:, 1:], z[:, :1]], axis=1)
+            + jnp.concatenate([z[:, :1], g[:, :-1]], axis=1)
+        )
+        ax = diag * g - nbrs
+        return (x.reshape(nx, ny) + (omega / diag) * (rhs.reshape(nx, ny) - ax)).reshape(-1)
+
+    contraction = min(4.0 / (4.0 + shift), 1.0) if omega == 1.0 else None
+    return FixedPoint(
+        n=n,
+        full_map=f,
+        name=f"poisson2d({nx}x{ny},omega={omega},shift={shift})",
+        contraction=contraction,
+    )
+
+
+@register_solver("jacobi_dense")
+def jacobi_dense(
+    A: jnp.ndarray | None = None,
+    b: jnp.ndarray | None = None,
+    *,
+    omega: float = 1.0,
+    n: int = 64,
+    seed: int = 0,
+    dominance: float = 2.0,
+) -> FixedPoint:
+    """Weighted Jacobi on a dense system (tests): f(x) = x + omega*D^-1(b-Ax).
+
+    With no ``A``/``b`` given, a random strictly diagonally dominant system
+    is generated (rho(|T|) <= 1/dominance)."""
+    contraction = None
+    if A is None:
+        A, b = random_dd_system(n, seed=seed, dominance=dominance)
+        A, b = jnp.asarray(A, jnp.float32), jnp.asarray(b, jnp.float32)
+        if omega == 1.0:
+            contraction = 1.0 / dominance
+    n = A.shape[0]
+    dinv = 1.0 / jnp.diag(A)
+
+    def f(x):
+        return x + omega * dinv * (b - A @ x)
+
+    return FixedPoint(
+        n=n, full_map=f, name=f"jacobi_dense(n={n})", contraction=contraction
+    )
+
+
+@register_solver("richardson")
+def richardson_dense(
+    A: jnp.ndarray | None = None,
+    b: jnp.ndarray | None = None,
+    *,
+    alpha: float = 0.1,
+    n: int = 64,
+    seed: int = 0,
+) -> FixedPoint:
+    """Richardson iteration (a 'gradient method' in the paper's sense):
+    f(x) = x + alpha*(b - Ax)."""
+    if A is None:
+        A, b = random_dd_system(n, seed=seed)
+        # normalize so alpha*A is a contraction on the default system
+        A = jnp.asarray(A / np.abs(A).sum(axis=1, keepdims=True), jnp.float32)
+        b = jnp.asarray(b / np.abs(np.asarray(b)).max(), jnp.float32)
+    n = A.shape[0]
+
+    def f(x):
+        return x + alpha * (b - A @ x)
+
+    return FixedPoint(n=n, full_map=f, name=f"richardson(n={n})")
+
+
+@register_solver("d_iteration")
+def d_iteration(
+    n: int = 64,
+    *,
+    damping: float = 0.85,
+    out_degree: int = 4,
+    seed: int = 0,
+    v: jnp.ndarray | None = None,
+) -> FixedPoint:
+    """Sparse diffusion fixed point (the D-iteration family, arXiv:1301.3007).
+
+    ``f(x) = damping * P x + (1 - damping) * v`` with ``P`` column-stochastic
+    (each node diffuses its mass to ``out_degree`` random successors plus a
+    ring edge so the graph is strongly connected).  ``|T| = damping * P`` has
+    rho = damping < 1, so the iteration is asynchronously convergent and its
+    fixed point is the damped diffusion (PageRank-style) vector.  The async
+    engine's block partition assigns each worker a contiguous node range —
+    the per-node/partial-diffusion scheduling of the D-iteration papers maps
+    onto the engine's activity subsets.
+    """
+    rng = np.random.default_rng(seed)
+    cols = np.zeros((n, n), np.float32)
+    for j in range(n):
+        succ = set(rng.choice(n, size=min(out_degree, n), replace=False).tolist())
+        succ.add((j + 1) % n)  # ring edge: strong connectivity
+        succ.discard(j)
+        w = 1.0 / len(succ)
+        for i in succ:
+            cols[i, j] = w
+    P = jnp.asarray(cols)
+    if v is None:
+        v = jnp.ones((n,), jnp.float32) / n
+    v = jnp.asarray(v, jnp.float32)
+
+    def f(x):
+        return damping * (P @ x) + (1.0 - damping) * v
+
+    return FixedPoint(
+        n=n,
+        full_map=f,
+        name=f"d_iteration(n={n},d={damping})",
+        contraction=damping,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Test-matrix helpers
+# ---------------------------------------------------------------------------
+
+
+def random_dd_system(n: int, *, seed: int = 0, dominance: float = 2.0):
+    """Random strictly diagonally dominant system (async-convergent Jacobi:
+    rho(|T|) <= 1/dominance < 1).  Returns (A, b) as numpy arrays."""
+    rng = np.random.default_rng(seed)
+    A = rng.uniform(-1.0, 1.0, size=(n, n))
+    np.fill_diagonal(A, 0.0)
+    rowsum = np.abs(A).sum(axis=1)
+    np.fill_diagonal(A, dominance * rowsum + 1e-3)
+    b = rng.uniform(-10.0, 10.0, size=(n,))
+    return A, b
+
+
+def spectral_radius_abs_T(A: np.ndarray, iters: int = 200) -> float:
+    """Power-iteration estimate of rho(|T|) for Jacobi T = I - D^-1 A
+    (asynchronous convergence criterion [4])."""
+    D = np.diag(A)
+    T = np.abs(np.eye(A.shape[0]) - A / D[:, None])
+    v = np.ones(A.shape[0]) / np.sqrt(A.shape[0])
+    lam = 0.0
+    for _ in range(iters):
+        w = T @ v
+        lam = float(np.linalg.norm(w))
+        if lam == 0.0:
+            return 0.0
+        v = w / lam
+    return lam

@@ -11,9 +11,9 @@ final value verbatim.
   fp32, plus ~1.6% scale overhead) with dequant-accumulate on receive —
   on TPU that accumulate is the ``mrd_combine`` Pallas kernel's job
   (executor ``device_fused``).  Only valid for ``op='sum'``.
-  Quantization noise is bounded per stage (|err| <= amax/254 per block)
-  but is *not* compensated: error feedback (EF-SGD residual carry) is
-  future work at the grad-sync layer.
+  Quantization noise is bounded per stage (|err| <= amax/254 per block);
+  the grad-sync layer compensates the first hop with EF-SGD residual
+  carry (:func:`ef_roundtrip` — see ``gradsync/mrd_zero1.py``).
 """
 
 from __future__ import annotations
@@ -51,6 +51,24 @@ def quantization_error(x, block: int = BLOCK):
 def wire_bytes_factor(dtype_bytes: int = 4, block: int = BLOCK) -> float:
     """Bytes-on-wire ratio of compressed vs uncompressed payloads."""
     return (1.0 + 4.0 / block) / dtype_bytes
+
+
+def ef_roundtrip(x, ef, block: int = BLOCK):
+    """EF-SGD error feedback for a quantized send (Stich et al. / Karimireddy
+    et al.): compress what you *meant* to send (``x + ef``), remember what
+    the grid dropped.
+
+    Returns ``(sendable, new_ef)``: ``sendable`` is the quantization-grid
+    round-trip of ``x + ef`` (feeding it to an int8-transform collective
+    makes the first-hop encode near-lossless), and ``new_ef = (x + ef) -
+    sendable`` is the residual to carry into the next step.  Coordinates
+    persistently below their block's quantization step accumulate in ``ef``
+    until they cross it — without this they are silently dropped forever.
+    """
+    want = x.astype(jnp.float32) + ef
+    q, s = quantize(want, block)
+    sendable = dequantize(q, s, block)
+    return sendable, want - sendable
 
 
 # ---------------------------------------------------------------------------

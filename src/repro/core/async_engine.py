@@ -1,196 +1,19 @@
-"""Bounded-delay simulator of asynchronous iterations (paper S1) with the
-paper's convergence-detection protocols layered on top.
+"""Import-compatible shim over :mod:`repro.asynchrony.engine`.
 
-``p`` virtual workers each own one block of the iterate.  Per global tick:
-
-1. an activity subset ``P^k`` is drawn (Bernoulli + forced activity every
-   ``force_every`` ticks — the paper's first fairness condition);
-2. each active worker applies its block map to a *stale view* of the global
-   vector assembled from a ring-buffer history with per-(i,j) delays bounded
-   by ``max_delay`` (the second fairness condition: tau -> infinity);
-3. the selected detection protocol advances one step (the non-blocking MRD
-   Allreduce advances exactly one stage per tick — communication progresses
-   while workers compute, which is the point of the paper's statechart).
-
-Modes: ``inexact`` (Alg. 1), ``exact`` (Alg. 2, snapshot-certified),
-``oracle`` (physically unrealizable ground truth: the true residual of the
-*current* global iterate), ``sync`` (classic synchronous Jacobi + blocking
-Allreduce every iteration, for the paper's Fig. 5 comparison).
-
-Everything is a single ``lax.while_loop`` — jittable and deterministic.
-Message accounting follows the paper: point-to-point ``Send(x_i)`` to all
-dependent neighbors (all-to-all assumption) plus per-stage collective
-messages from the schedule.
+The bounded-delay simulator, its delay models, detection protocols, and the
+solver registry live in ``repro.asynchrony`` (DESIGN.md S11); this module
+keeps the historical ``repro.core.async_engine`` surface alive.  New code
+should import from ``repro.asynchrony``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import detection, topology
-from repro.core.solvers import FixedPoint
-
-
-@dataclasses.dataclass(frozen=True)
-class AsyncConfig:
-    p: int
-    max_delay: int = 3
-    activity: float = 0.7
-    force_every: int = 5
-    detection: str = "exact"  # 'inexact' | 'exact' | 'oracle' | 'sync'
-    eps: float = 1e-6
-    max_ticks: int = 20000
-    seed: int = 0
-
-
-@dataclasses.dataclass
-class AsyncResult:
-    detected: bool
-    det_tick: int
-    ticks: int
-    res_glb: float  # detector's certified value at detection
-    true_res: float  # ground-truth ||f(.)-.||_inf of the returned solution
-    kiter: np.ndarray  # per-worker local iteration counts
-    messages_p2p: int
-    messages_coll: int
-    x: np.ndarray  # returned solution (x̄ for 'exact', current x otherwise)
-
-
-def _stage_message_table(p: int) -> jnp.ndarray:
-    """messages sent at stage s of the MRD allreduce cycle."""
-    sched = topology.allreduce_schedule(p)
-    if not sched:
-        return jnp.zeros((1,), jnp.int32)
-    return jnp.asarray([len(st.pairs) for st in sched], jnp.int32)
-
-
-def run(fp: FixedPoint, cfg: AsyncConfig) -> AsyncResult:
-    p = cfg.p
-    if fp.n % p:
-        raise ValueError(f"n={fp.n} must be divisible by p={p}")
-    m = fp.n // p
-    H = cfg.max_delay + 2  # ring-buffer depth (delays in [0, max_delay])
-    sync = cfg.detection == "sync"
-    base_key = jax.random.PRNGKey(cfg.seed)
-    msg_table = _stage_message_table(p)
-    coll_cycle_msgs = topology.paper_message_count(p)
-
-    x0 = jnp.zeros((p, m), jnp.float32)
-
-    def det_init():
-        if cfg.detection == "inexact":
-            return detection.inexact_init(p)
-        if cfg.detection == "exact":
-            return detection.exact_init(p, m)
-        # oracle / sync carry a trivial det state
-        return {
-            "res_norm": jnp.full((), detection._BIG, jnp.float32),
-            "detected": jnp.zeros((), jnp.bool_),
-        }
-
-    def cond(c):
-        return (~c["det"]["detected"]) & (c["tick"] < cfg.max_ticks)
-
-    def body(c):
-        tick = c["tick"]
-        key = jax.random.fold_in(base_key, tick)
-        k_act, k_delay, k_snap = jax.random.split(key, 3)
-
-        if sync:
-            active = jnp.ones((p,), jnp.bool_)
-            delays = jnp.zeros((p, p), jnp.int32)
-        else:
-            active = jax.random.bernoulli(k_act, cfg.activity, (p,)) | (
-                tick - c["last_active"] >= cfg.force_every
-            )
-            delays = jax.random.randint(k_delay, (p, p), 0, cfg.max_delay + 1)
-
-        # Assemble stale views: worker i sees block j from `delays[i,j]` ticks
-        # ago (its own block is always current).
-        idx = jnp.mod(tick - 1 - delays, H)  # [p, p]
-        views = c["hist"][idx, jnp.arange(p)[None, :]]  # [p, p, m]
-        views = views.at[jnp.arange(p), jnp.arange(p)].set(c["x"])
-        xnew = fp.block_views_update(views.reshape(p, p * m))  # [p, m]
-
-        x = jnp.where(active[:, None], xnew, c["x"])
-        upd = jnp.max(jnp.abs(x - c["x"]), axis=1)
-        update_mag = jnp.where(active, upd, c["update_mag"])
-        hist = c["hist"].at[jnp.mod(tick, H)].set(x)
-
-        # --- detection ---
-        det = c["det"]
-        coll_msgs = c["messages_coll"]
-        if cfg.detection == "inexact":
-            stage_before = det["nb"]["stage"]
-            det = detection.inexact_tick(det, update_mag, p=p, eps=cfg.eps)
-            coll_msgs = coll_msgs + msg_table[jnp.minimum(stage_before, msg_table.shape[0] - 1)]
-        elif cfg.detection == "exact":
-            stage_before = det["nb"]["stage"]
-            in_reduce = det["mode"] == 1
-            det = detection.exact_tick(
-                det, x, fp=fp, now=tick, key=k_snap,
-                max_delay=cfg.max_delay, eps=cfg.eps,
-            )
-            coll_msgs = coll_msgs + jnp.where(
-                in_reduce, msg_table[jnp.minimum(stage_before, msg_table.shape[0] - 1)], 0
-            )
-            # snapshot markers + data replies (all-to-all) on snapshot start
-            started = (~in_reduce) & (c["det"]["snap"]["in_progress"] == False)  # noqa: E712
-            coll_msgs = coll_msgs + jnp.where(started, 2 * p * (p - 1), 0)
-        elif cfg.detection == "oracle":
-            res = fp.residual_norm(x.reshape(-1))
-            det = {"res_norm": res, "detected": res < cfg.eps}
-        else:  # sync: blocking allreduce of update magnitudes every iteration
-            res = jnp.max(update_mag)
-            det = {"res_norm": res, "detected": res < cfg.eps}
-            coll_msgs = coll_msgs + coll_cycle_msgs
-
-        n_active = jnp.sum(active.astype(jnp.int32))
-        return {
-            "tick": tick + 1,
-            "x": x,
-            "hist": hist,
-            "update_mag": update_mag,
-            "kiter": c["kiter"] + active.astype(jnp.int32),
-            "last_active": jnp.where(active, tick, c["last_active"]),
-            "det": det,
-            "messages_p2p": c["messages_p2p"] + n_active * (p - 1),
-            "messages_coll": coll_msgs,
-        }
-
-    carry = {
-        "tick": jnp.ones((), jnp.int32),
-        "x": x0,
-        "hist": jnp.broadcast_to(x0, (H, p, m)).astype(jnp.float32),
-        "update_mag": jnp.full((p,), detection._BIG, jnp.float32),
-        "kiter": jnp.zeros((p,), jnp.int32),
-        "last_active": jnp.zeros((p,), jnp.int32),
-        "det": det_init(),
-        "messages_p2p": jnp.zeros((), jnp.int32),
-        "messages_coll": jnp.zeros((), jnp.int32),
-    }
-
-    final = jax.jit(lambda c: jax.lax.while_loop(cond, body, c))(carry)
-
-    detected = bool(final["det"]["detected"])
-    if cfg.detection == "exact":
-        x_out = np.asarray(final["det"]["xbar"])
-    else:
-        x_out = np.asarray(final["x"]).reshape(-1)
-    true_res = float(fp.residual_norm(jnp.asarray(x_out)))
-    return AsyncResult(
-        detected=detected,
-        det_tick=int(final["tick"]) - 1,
-        ticks=int(final["tick"]) - 1,
-        res_glb=float(final["det"]["res_norm"]),
-        true_res=true_res,
-        kiter=np.asarray(final["kiter"]),
-        messages_p2p=int(final["messages_p2p"]),
-        messages_coll=int(final["messages_coll"]),
-        x=x_out,
-    )
+from repro.asynchrony.engine import (  # noqa: F401
+    AsyncConfig,
+    AsyncResult,
+    SweepResult,
+    resolve_delay_params,
+    run,
+    sweep,
+)
+from repro.asynchrony.engine import _stage_message_table  # noqa: F401

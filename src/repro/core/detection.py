@@ -1,205 +1,63 @@
-"""Convergence detection (paper S3): Algorithm 1 (inexact) and Algorithm 2
-(exact, snapshot-based), plus the training-loop ConvergenceMonitor.
+"""Import-compatible shim over :mod:`repro.asynchrony.protocols`.
 
-The solver-level detectors are tick-wise state machines driven by
-``repro.core.async_engine`` over the **sim** executor.  The training-level
-``ConvergenceMonitor`` runs the same non-blocking MRD reduction over one or
-more mesh axes (the **device** executor) and is advanced one stage per train
-step — the paper's statechart embedded in a production training loop.
-
-Everything here drives :class:`repro.collectives.plans.CollectivePlan`
-(``init``/``step``), so detection uses the exact same stage interpreter as
-the gradient collectives.
+The paper's detection algorithms are now registry entries
+(``repro.asynchrony.DETECTION_PROTOCOLS``: ``inexact`` / ``exact`` /
+``interval`` / ``oracle`` / ``sync``), each an ``init``/``tick``/``finalize``
+object over a :class:`repro.collectives.plans.CollectivePlan`; the
+training-loop :class:`ConvergenceMonitor` is built from the same registry.
+This module keeps the historical tick-function surface alive for old
+callers.  New code should import from ``repro.asynchrony``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
-
-import jax
 import jax.numpy as jnp
 
-from repro import compat
-from repro.collectives import plans
-from repro.core import snapshot
-from repro.core.solvers import FixedPoint
+from repro.asynchrony.protocols import (  # noqa: F401
+    DETECTION_PROTOCOLS,
+    RES_INIT,
+    ConvergenceMonitor,
+    Obs,
+    get_protocol,
+)
 
-_BIG = 1e30  # finite 'infinity' for residual latches
-
-
-def _sim_plan(p: int) -> plans.CollectivePlan:
-    return plans.allreduce_plan(schedule="mrd", p=p, op="max")
-
-
-# ---------------------------------------------------------------------------
-# Algorithm 1: inexact detection (non-blocking Allreduce of local residuals)
-# ---------------------------------------------------------------------------
+# Deprecated alias (was the module-private residual latch); prefer RES_INIT.
+_BIG = RES_INIT
 
 
-def inexact_init(p: int) -> dict[str, Any]:
-    return {
-        "nb": _sim_plan(p).init(jnp.full((p,), _BIG, jnp.float32)),
-        "res_loc": jnp.full((p,), _BIG, jnp.float32),
-        "res_norm": jnp.full((), _BIG, jnp.float32),
-        "detected": jnp.zeros((), jnp.bool_),
-    }
+def _obs(**kw) -> Obs:
+    defaults = dict(
+        x=None, update_mag=None, tick=jnp.zeros((), jnp.int32), key=None,
+        fp=None, eps=0.0, max_delay=0,
+        msg_table=jnp.zeros((1,), jnp.int32),
+        coll_cycle_msgs=jnp.zeros((), jnp.int32),
+    )
+    defaults.update(kw)
+    return Obs(**defaults)
+
+
+def inexact_init(p: int):
+    return get_protocol("inexact").init(p, 0, None)
 
 
 def inexact_tick(det, update_mag, *, p: int, eps: float):
-    """One tick of Algorithm 1.
-
-    ``update_mag``: [p], each worker's last local update magnitude
-    ``||x_i - z_i||_inf`` (its res_loc candidate).  Following the paper, the
-    Allreduce is advanced every iteration; when a cycle completes (flag), the
-    worker reads res_glb into res_norm and re-latches res_loc from its current
-    local residual.  Inexact: contributions mix different local iterations.
-    """
-    nb = _sim_plan(p).step(det["nb"], det["res_loc"])
-    flag = nb["flag"]
-    res_norm = jnp.where(flag, jnp.max(nb["result"]), det["res_norm"])
-    res_loc = jnp.where(flag, update_mag, det["res_loc"])
-    detected = det["detected"] | (flag & (res_norm < eps))
-    return {"nb": nb, "res_loc": res_loc, "res_norm": res_norm, "detected": detected}
+    st, _ = get_protocol("inexact").tick(
+        det, _obs(update_mag=update_mag, eps=eps)
+    )
+    return st
 
 
-# ---------------------------------------------------------------------------
-# Algorithm 2: exact detection (snapshot -> residual on x̄ -> Allreduce)
-# ---------------------------------------------------------------------------
+def exact_init(p: int, m: int):
+    return get_protocol("exact").init(p, m, None)
 
 
-def exact_init(p: int, m: int) -> dict[str, Any]:
-    return {
-        "snap": snapshot.init(p, m),
-        "nb": _sim_plan(p).init(jnp.full((p,), _BIG, jnp.float32)),
-        "res_loc": jnp.full((p,), _BIG, jnp.float32),
-        "res_norm": jnp.full((), _BIG, jnp.float32),
-        "mode": jnp.zeros((), jnp.int32),  # 0 = snapshot (sflag), 1 = reduce
-        "xbar": jnp.zeros((p * m,), jnp.float32),
-        "detected": jnp.zeros((), jnp.bool_),
-    }
-
-
-def exact_tick(det, x_blocks, *, fp: FixedPoint, now, key, max_delay: int, eps: float):
-    """One tick of Algorithm 2.
-
-    Snapshot phase (sflag): the Chandy–Lamport cut assembles a consistent x̄;
-    on completion each worker computes ``res_loc_i = ||f_i(x̄) - x̄_i||_inf``
-    on the *frozen* x̄ (eflag in the paper).  Reduce phase: the non-blocking
-    MRD Allreduce certifies ``||f(x̄) - x̄||_inf < eps`` exactly for that x̄;
-    on failure a new snapshot begins.
-    """
-    p, m = x_blocks.shape
-
-    def snapshot_phase(d):
-        snap = d["snap"]
-        fresh = ~snap["in_progress"]
-        started = snapshot.start(snap, now, key, max_delay)
-        snap = jax.tree.map(
-            lambda a, b: jnp.where(fresh, a, b), started, snap
-        )
-        snap = snapshot.tick(snap, x_blocks, now)
-        fin = snapshot.done(snap, now)
-        xbar = snapshot.assembled(snap)
-        fx = fp.full_map(xbar)
-        res_blocks = jnp.max(jnp.abs(fx - xbar).reshape(p, m), axis=1)
-        return {
-            **d,
-            "snap": {**snap, "in_progress": snap["in_progress"] & ~fin},
-            "res_loc": jnp.where(fin, res_blocks, d["res_loc"]),
-            "xbar": jnp.where(fin, xbar, d["xbar"]),
-            "mode": jnp.where(fin, 1, d["mode"]),
-        }
-
-    def reduce_phase(d):
-        nb = _sim_plan(p).step(d["nb"], d["res_loc"])
-        flag = nb["flag"]
-        res_norm = jnp.where(flag, jnp.max(nb["result"]), d["res_norm"])
-        det_now = flag & (res_norm < eps)
-        return {
-            **d,
-            "nb": nb,
-            "res_norm": res_norm,
-            "detected": d["detected"] | det_now,
-            # on a failed certification, go back to the snapshot phase
-            "mode": jnp.where(flag & ~det_now, 0, d["mode"]),
-        }
-
-    return jax.lax.cond(det["mode"] == 0, snapshot_phase, reduce_phase, det)
-
-
-# ---------------------------------------------------------------------------
-# Training-loop monitor (device executor)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class ConvergenceMonitor:
-    """Paper's detection embedded in a training step, over the DP mesh axes.
-
-    ``mode='inexact'``: each cycle latches the worker's *current* metric (e.g.
-    local grad-norm or loss delta); the certified global value lags by
-    ``cycle_length`` steps and may mix step indices across workers — exactly
-    the paper's Algorithm 1 trade-off, but it never blocks the step.
-
-    ``mode='exact'``: contributions are latched only from steps where
-    ``step_idx % cycle_length == 0``; all workers therefore reduce metrics
-    from the *same* global step (a consistent cut — the BSP analogue of the
-    snapshot), so the certified value is exact for that step.
-
-    ``axis_name`` may be a single mesh axis or a tuple (e.g. a multi-pod
-    ``("pod", "data")`` DP domain): the underlying plan chains the per-axis
-    MRD schedules into one stage list, so detection over a product of axes
-    costs one scalar ppermute per step exactly like the single-axis case.
-
-    Use inside shard_map/jit: ``state, done, value = monitor.step(state, metric,
-    step_idx)``.
-    """
-
-    axis_name: Any  # str or tuple of axis names (e.g. ("pod","data"))
-    threshold: float
-    mode: str = "inexact"  # 'inexact' | 'exact'
-    op: str = "max"
-
-    def _axes(self) -> tuple[str, ...]:
-        if isinstance(self.axis_name, str):
-            return (self.axis_name,)
-        return tuple(self.axis_name)
-
-    def _plan(self) -> plans.CollectivePlan:
-        return plans.allreduce_plan(schedule="mrd", axes=self._axes(), op=self.op)
-
-    def init(self, varying: bool = True) -> dict[str, Any]:
-        """``varying=True`` when called *inside* a shard_map region with VMA
-        checking on (marks state as varying over the manual axes so it can be
-        carried through scan/while).  Use ``varying=False`` when building the
-        global state outside shard_map (e.g. replicated-then-sharded train
-        state)."""
-        metric0 = jnp.full((), _BIG, jnp.float32)
-        state = {
-            "nb": plans.allreduce_plan(schedule="mrd", p=1).init(metric0),
-            "latched": metric0,
-            "value": metric0,
-            "done": jnp.zeros((), jnp.bool_),
-        }
-        if not varying:
-            return state
-        return jax.tree.map(lambda x: compat.pvary(x, self._axes()), state)
-
-    def step(self, state, local_metric, step_idx):
-        local_metric = local_metric.astype(jnp.float32)
-        plan = self._plan()
-        if self.mode == "exact":
-            clen = plan.cycle_length()
-            latch_now = (step_idx % clen) == 0
-            latched = jnp.where(latch_now, local_metric, state["latched"])
-        else:
-            latched = local_metric
-        nb = plan.step(state["nb"], latched)
-        value = jnp.where(nb["flag"], nb["result"], state["value"])
-        done = state["done"] | (nb["flag"] & (value < self.threshold))
-        return (
-            {"nb": nb, "latched": latched, "value": value, "done": done},
-            done,
-            value,
-        )
+def exact_tick(det, x_blocks, *, fp, now, key, max_delay: int, eps: float):
+    p = x_blocks.shape[0]
+    st, _ = get_protocol("exact").tick(
+        det,
+        _obs(
+            x=x_blocks, update_mag=jnp.zeros((p,), jnp.float32), tick=now,
+            key=key, fp=fp, eps=eps, max_delay=max_delay,
+        ),
+    )
+    return st

@@ -1,128 +1,21 @@
-"""Fixed-point mappings for (asynchronous) iterative solvers.
+"""Import-compatible shim over :mod:`repro.asynchrony.solvers`.
 
-The paper's setting: ``Ax = b``, splitting ``A = M - N``, iteration
-``x <- Tx + c`` with ``T = M^{-1}N``.  The engine (``async_engine``) only
-needs the fixed-point map ``f`` and block partitioning; solvers here provide
-the paper's S4 experiment (1-D two-point boundary-value problem, finite
-differences) plus dense variants for tests.
-
-Asynchronous convergence requires rho(|T|) < 1 (contraction in a weighted max
-norm [4,2]); ``spectral_radius_abs_T`` estimates it for test matrices.
+Fixed-point solvers are now a registry (``repro.asynchrony.SOLVERS``:
+``poisson1d`` / ``poisson2d`` / ``jacobi_dense`` / ``richardson`` /
+``d_iteration``); this module keeps the historical names alive.  New code
+should import from ``repro.asynchrony``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-
-@dataclasses.dataclass(frozen=True)
-class FixedPoint:
-    """A fixed-point problem f(x) = x partitioned into p equal blocks."""
-
-    n: int
-    full_map: Callable  # [n] -> [n], the map f
-    name: str = "fixed-point"
-
-    def residual_norm(self, x):
-        """||f(x) - x||_inf — the paper's termination functional."""
-        return jnp.max(jnp.abs(self.full_map(x) - x))
-
-    def block_views_update(self, views):
-        """views: [p, n] (worker i's possibly-stale global view).
-        Returns [p, m]: worker i's new block = f(view_i) restricted to block i."""
-        p = views.shape[0]
-        m = self.n // p
-        full = jax.vmap(self.full_map)(views)  # [p, n]
-        return full.reshape(p, p, m)[jnp.arange(p), jnp.arange(p)]
-
-
-def poisson_1d(
-    n: int,
-    *,
-    omega: float = 1.0,
-    shift: float = 0.0,
-    rhs: jnp.ndarray | None = None,
-    seed: int = 0,
-    rhs_scale: float = 10.0,
-) -> FixedPoint:
-    """The paper's S4 problem: 1-D two-point BVP, finite differences.
-
-    A = tridiag(-1, 2+shift, -1) (n x n), b ~ U[-rhs_scale, rhs_scale] (paper:
-    n = 10000, b in [-10, 10], shift = 0).  Weighted-Jacobi fixed point:
-    ``f(x) = x + (omega/diag) * (b - Ax)``.  ``shift > 0`` makes A strictly
-    diagonally dominant (rho(|T|) <= 2/(2+shift) < 1), giving fast asynchronous
-    contraction for protocol benchmarks; shift = 0 is the paper's exact (slow,
-    rho ~ 1 - O(1/n^2)) problem.
-    """
-    if rhs is None:
-        rhs = jax.random.uniform(
-            jax.random.PRNGKey(seed), (n,), minval=-rhs_scale, maxval=rhs_scale
-        )
-    diag = 2.0 + shift
-
-    def apply_A(x):
-        up = jnp.concatenate([x[1:], jnp.zeros((1,), x.dtype)])
-        down = jnp.concatenate([jnp.zeros((1,), x.dtype), x[:-1]])
-        return diag * x - up - down
-
-    def f(x):
-        return x + (omega / diag) * (rhs - apply_A(x))
-
-    return FixedPoint(
-        n=n, full_map=f, name=f"poisson1d(n={n},omega={omega},shift={shift})"
-    )
-
-
-def jacobi_dense(A: jnp.ndarray, b: jnp.ndarray, *, omega: float = 1.0) -> FixedPoint:
-    """Weighted Jacobi on a dense system (tests): f(x) = x + omega*D^-1(b-Ax)."""
-    n = A.shape[0]
-    dinv = 1.0 / jnp.diag(A)
-
-    def f(x):
-        return x + omega * dinv * (b - A @ x)
-
-    return FixedPoint(n=n, full_map=f, name=f"jacobi_dense(n={n})")
-
-
-def richardson_dense(A, b, *, alpha: float) -> FixedPoint:
-    """Richardson iteration (a 'gradient method' in the paper's sense):
-    f(x) = x + alpha*(b - Ax)."""
-    n = A.shape[0]
-
-    def f(x):
-        return x + alpha * (b - A @ x)
-
-    return FixedPoint(n=n, full_map=f, name=f"richardson(n={n})")
-
-
-def random_dd_system(n: int, *, seed: int = 0, dominance: float = 2.0):
-    """Random strictly diagonally dominant system (async-convergent Jacobi:
-    rho(|T|) <= 1/dominance < 1).  Returns (A, b) as numpy arrays."""
-    rng = np.random.default_rng(seed)
-    A = rng.uniform(-1.0, 1.0, size=(n, n))
-    np.fill_diagonal(A, 0.0)
-    rowsum = np.abs(A).sum(axis=1)
-    np.fill_diagonal(A, dominance * rowsum + 1e-3)
-    b = rng.uniform(-10.0, 10.0, size=(n,))
-    return A, b
-
-
-def spectral_radius_abs_T(A: np.ndarray, iters: int = 200) -> float:
-    """Power-iteration estimate of rho(|T|) for Jacobi T = I - D^-1 A
-    (asynchronous convergence criterion [4])."""
-    D = np.diag(A)
-    T = np.abs(np.eye(A.shape[0]) - A / D[:, None])
-    v = np.ones(A.shape[0]) / np.sqrt(A.shape[0])
-    lam = 0.0
-    for _ in range(iters):
-        w = T @ v
-        lam = float(np.linalg.norm(w))
-        if lam == 0.0:
-            return 0.0
-        v = w / lam
-    return lam
+from repro.asynchrony.solvers import (  # noqa: F401
+    SOLVERS,
+    FixedPoint,
+    d_iteration,
+    jacobi_dense,
+    poisson_1d,
+    poisson_2d,
+    random_dd_system,
+    richardson_dense,
+    spectral_radius_abs_T,
+)

@@ -17,8 +17,9 @@ call :func:`register`, import it below.
   chained all-gather of the bf16 params.  Non-power-of-two DP groups (the
   paper's headline case) work natively; elasticity uses exactly this.
 - ``compressed``: mrd_zero1 with int8-quantized wire payloads (+ the
-  ``device_fused`` Pallas-combine executor on TPU); quantization noise is
-  bounded per stage but uncompensated (no error feedback yet).
+  ``device_fused`` Pallas-combine executor on TPU); EF-SGD error feedback
+  (on by default, ``tcfg.error_feedback``) carries the quantization
+  residual across steps.
 - ``local_sgd``: bounded-staleness local SGD; replicas averaged by the
   paper's collectives every ``local_sync_every`` steps (DESIGN.md S9).
 """

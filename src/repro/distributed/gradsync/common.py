@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.detection import ConvergenceMonitor
+from repro.asynchrony import ConvergenceMonitor
 from repro.distributed import sharding as shd
 from repro.models import transformer
 from repro.models.config import ModelConfig
@@ -39,8 +39,14 @@ class TrainConfig:
     grad_sync: str = "gspmd"
     local_sync_every: int = 8  # local_sgd: MRD param-average period (staleness bound)
     monitor: bool = True
-    monitor_mode: str = "inexact"  # paper Alg.1 ('inexact') / Alg.2 ('exact')
+    # any repro.asynchrony.DETECTION_PROTOCOLS entry with a training-loop
+    # policy: 'inexact' (Alg.1) | 'exact' (Alg.2) | 'interval' (windowed)
+    monitor_mode: str = "inexact"
     monitor_threshold: float = 1e-3
+    # EF-SGD error feedback for quantized grad sync ('compressed'): carry the
+    # per-shard quantization residual and fold it into the next step's
+    # gradient.  Ignored by identity-transform modes.
+    error_feedback: bool = True
     optimizer: opt_lib.OptimizerConfig = dataclasses.field(
         default_factory=opt_lib.OptimizerConfig
     )

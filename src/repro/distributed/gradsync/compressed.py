@@ -7,8 +7,11 @@ across buckets (DESIGN.md S10); buckets stay 256-block aligned so the
 quantizer never straddles a bucket boundary.
 
 Quantization noise is bounded per stage (see
-``repro.collectives.transforms``) but uncompensated — error feedback
-(EF-SGD residual carry across steps) is not implemented yet.
+``repro.collectives.transforms``) and — with ``tcfg.error_feedback``, the
+default — first-hop compensated: each rank carries the EF-SGD residual of
+what it sent and folds it into the next step's gradient
+(:func:`repro.collectives.transforms.ef_roundtrip`), so coordinates
+persistently below the quantization step are delayed rather than dropped.
 """
 
 from __future__ import annotations

@@ -152,6 +152,12 @@ def make_zero1(
     gradient-scale collectives run per-bucket, pipelined stage-major
     (DESIGN.md S10).
     Global grad-norm clipping uses the paper's MRD allreduce on the scalar.
+
+    With a lossy ``transform`` and ``tcfg.error_feedback``, each rank
+    carries an EF-SGD residual (``opt['ef']``, the full padded gradient
+    length): the quantization error of what it sent this step is folded
+    into next step's gradient (:func:`repro.collectives.transforms.ef_roundtrip`),
+    so persistently-sub-quantum coordinates are delayed, not dropped.
     """
     rules = shd.make_rules(cfg, mesh, fsdp=False)  # DP-replicated params
     remat_policy = common.REMAT_POLICIES[tcfg.remat]
@@ -185,6 +191,7 @@ def make_zero1(
     # per-bucket split points of the concatenated shard / full vector
     full_bounds = list(np.cumsum(layout.bucket_lengths)[:-1])
     shard_bounds = [b // prod_p0 for b in full_bounds]
+    use_ef = tcfg.error_feedback and transform != "identity"
 
     def init_state(key):
         params = transformer.init_params(cfg, key)
@@ -192,13 +199,16 @@ def make_zero1(
             params, mesh, dp_axes,
             bucket_bytes=tcfg.bucket_bytes, paper_mode=paper_mode,
         )
+        opt = {
+            "master": masters,
+            "mu": jnp.zeros((dp, shard_len), jnp.float32),
+            "nu": jnp.zeros((dp, shard_len), jnp.float32),
+        }
+        if use_ef:
+            opt["ef"] = jnp.zeros((dp, padded), jnp.float32)
         state = {
             "params": params,
-            "opt": {
-                "master": masters,
-                "mu": jnp.zeros((dp, shard_len), jnp.float32),
-                "nu": jnp.zeros((dp, shard_len), jnp.float32),
-            },
+            "opt": opt,
             "step": jnp.zeros((), jnp.int32),
         }
         if monitor is not None:
@@ -210,7 +220,7 @@ def make_zero1(
         dpP = P(dp_axes)
         specs = {
             "params": pspecs,
-            "opt": {"master": dpP, "mu": dpP, "nu": dpP},
+            "opt": jax.tree.map(lambda _: dpP, state["opt"]),
             "step": P(),
         }
         if monitor is not None:
@@ -235,6 +245,15 @@ def make_zero1(
             bufs = buckets.pack(
                 jax.tree.map(lambda g: g.astype(jnp.float32), grads), layout
             )
+            if use_ef:
+                # EF-SGD: send the grid round-trip of (grad + residual),
+                # carry what the quantizer dropped into the next step
+                from repro.collectives import transforms as tf_lib
+
+                ef_bufs = jnp.split(opt["ef"][0], full_bounds)
+                pairs = [tf_lib.ef_roundtrip(b, e) for b, e in zip(bufs, ef_bufs)]
+                bufs = [s for s, _ in pairs]
+                new_ef = jnp.concatenate([e for _, e in pairs])
             if paper_mode:
                 # the paper's Allreduce: full-buffer XOR butterfly per DP
                 # axis, pipelined stage-major across buckets
@@ -279,6 +298,8 @@ def make_zero1(
                 monitor, mon_state, metrics["per_example"].mean(), step
             )
             opt_out = jax.tree.map(lambda x: x[None], new_opt)
+            if use_ef:
+                opt_out["ef"] = new_ef[None]
             return (
                 new_params,
                 opt_out,
@@ -290,6 +311,7 @@ def make_zero1(
             )
 
         dpP = P(dp_axes)
+        opt_spec = jax.tree.map(lambda _: dpP, state["opt"])
         bspecs = common.batch_specs(cfg, rules, batch)
         if monitor is not None:
             mon_state_in = state["monitor"]
@@ -302,14 +324,14 @@ def make_zero1(
             mesh=mesh,
             in_specs=(
                 jax.tree.map(lambda _: P(), state["params"]),
-                {"master": dpP, "mu": dpP, "nu": dpP},
+                opt_spec,
                 P(),
                 mon_spec,
                 bspecs,
             ),
             out_specs=(
                 jax.tree.map(lambda _: P(), state["params"]),
-                {"master": dpP, "mu": dpP, "nu": dpP},
+                opt_spec,
                 mon_spec,
                 dpP,
                 dpP,

@@ -54,7 +54,15 @@ def main(argv=None):
     ap.add_argument("--schedule", default="cosine", choices=["cosine", "wsd", "const"])
     ap.add_argument("--monitor-threshold", type=float, default=0.0,
                     help="stop when the staged-MRD-certified loss < threshold")
-    ap.add_argument("--monitor-mode", default="inexact", choices=["inexact", "exact"])
+    ap.add_argument("--monitor-mode", default="inexact",
+                    choices=["inexact", "exact", "interval"])
+    ap.add_argument("--no-error-feedback", action="store_true",
+                    help="disable the EF-SGD residual carry of the "
+                         "'compressed' grad-sync mode")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="never donate the train state to jit (donation is "
+                         "already skipped on CPU, where it deadlocks "
+                         "shard_map strategies like mrd_leaf)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
@@ -75,6 +83,7 @@ def main(argv=None):
         monitor=args.monitor_threshold > 0,
         monitor_mode=args.monitor_mode,
         monitor_threshold=args.monitor_threshold,
+        error_feedback=not args.no_error_feedback,
         bucket_bytes=args.bucket_bytes or None,
         optimizer=OptimizerConfig(
             lr=args.lr, schedule=args.schedule,
@@ -97,7 +106,15 @@ def main(argv=None):
             state = ck.restore(step0, jax.tree.map(np.asarray, jax.device_get(state)), shardings)
             pipe.load_state_dict(ck.manifest(step0)["extra"]["data"])
             print(f"resumed from checkpoint step {step0}")
-        jstep = jax.jit(train_step, donate_argnums=(0,))
+        # Donating the state saves a copy on accelerators, but on multi-device
+        # CPU the DP-replicated params of the shard_map strategies (mrd_leaf &
+        # co) share one backing buffer across devices; donating it raises
+        # "Attempt to donate the same buffer twice in Execute()" on one
+        # replica while the others block forever at the collective-permute
+        # rendezvous — the historical mrd_leaf "deadlock".  Donation buys
+        # nothing on CPU anyway, so gate it on the backend.
+        donate = (0,) if jax.default_backend() != "cpu" and not args.no_donate else ()
+        jstep = jax.jit(train_step, donate_argnums=donate)
 
         t0 = time.time()
         for i in range(args.steps):

@@ -1,0 +1,200 @@
+"""The registry-backed asynchrony runtime (DESIGN.md S11): registry
+contents, sweep()/run() bit-identity, delay-model behavior, the new
+solvers, and the import-compat shims."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.asynchrony import (
+    DELAY_MODELS,
+    DETECTION_PROTOCOLS,
+    RES_INIT,
+    SOLVERS,
+    AsyncConfig,
+    make_solver,
+    resolve_delay_params,
+    run,
+    sweep,
+)
+
+
+def _cfg(**kw):
+    base = dict(p=4, detection="exact", eps=1e-5, max_ticks=50000, seed=1)
+    base.update(kw)
+    return AsyncConfig(**base)
+
+
+def test_registries_minimum_entries():
+    assert {"bernoulli", "straggler", "heterogeneous", "bursty", "trace"} <= set(
+        DELAY_MODELS
+    )
+    assert {"inexact", "exact", "oracle", "sync", "interval"} <= set(
+        DETECTION_PROTOCOLS
+    )
+    assert {"poisson1d", "poisson2d", "jacobi_dense", "richardson", "d_iteration"} <= set(
+        SOLVERS
+    )
+    assert len(DELAY_MODELS) >= 5 and len(DETECTION_PROTOCOLS) >= 5
+    assert len(SOLVERS) >= 5
+
+
+def test_sweep_bit_identical_to_run():
+    """Acceptance: one vmapped dispatch == a Python loop of run() calls,
+    bit for bit (bernoulli model)."""
+    fp = make_solver("poisson1d", n=96, shift=0.5, seed=0)
+    cfg = _cfg()
+    seeds = [0, 1, 2, 5]
+    sw = sweep(fp, cfg, seeds)
+    for i, s in enumerate(seeds):
+        r = run(fp, dataclasses.replace(cfg, seed=s))
+        assert sw.detected[i] == r.detected
+        assert sw.ticks[i] == r.ticks
+        assert sw.res_glb[i] == np.float32(r.res_glb)
+        assert sw.true_res[i] == np.float32(r.true_res)
+        np.testing.assert_array_equal(sw.kiter[i], r.kiter)
+        assert sw.messages_p2p[i] == r.messages_p2p
+        assert sw.messages_coll[i] == r.messages_coll
+        np.testing.assert_array_equal(sw.x[i], r.x)
+
+
+def test_sweep_param_grid():
+    """vmap over seeds x delay-model params in one dispatch: [G, S] axes."""
+    fp = make_solver("poisson1d", n=64, shift=0.5, seed=0)
+    cfg = _cfg(p=4)
+    grid = {"activity": jnp.asarray([0.3, 0.6, 0.9], jnp.float32)}
+    sw = sweep(fp, cfg, [0, 1], delay_params=grid)
+    assert sw.ticks.shape == (3, 2)
+    assert sw.x.shape == (3, 2, 64)
+    assert sw.detected.all()
+    assert (sw.true_res < cfg.eps).all()
+    # lower activity -> no lane finishes faster than the high-activity one
+    assert sw.ticks[0].mean() >= sw.ticks[2].mean()
+
+
+@pytest.mark.parametrize("model", sorted(DELAY_MODELS))
+def test_every_delay_model_converges_with_exact_detection(model):
+    fp = make_solver("poisson1d", n=96, shift=0.5, seed=0)
+    r = run(fp, _cfg(delay_model=model))
+    assert r.detected, f"exact detector never fired under {model}"
+    assert r.true_res < 1e-5
+
+
+def test_trace_replays_its_source_model():
+    """The default trace records bernoulli under the same seed stream, so
+    replaying it must reproduce the bernoulli run exactly."""
+    fp = make_solver("poisson1d", n=96, shift=0.5, seed=0)
+    r_b = run(fp, _cfg(delay_model="bernoulli"))
+    r_t = run(fp, _cfg(delay_model="trace"))
+    assert r_b.ticks == r_t.ticks
+    np.testing.assert_array_equal(r_b.x, r_t.x)
+    np.testing.assert_array_equal(r_b.kiter, r_t.kiter)
+
+
+def test_straggler_model_actually_lags():
+    """The slow subset iterates measurably less than the fast one."""
+    fp = make_solver("poisson1d", n=96, shift=0.5, seed=0)
+    cfg = _cfg(delay_model="straggler", detection="oracle", force_every=10)
+    params = resolve_delay_params(fp, cfg)
+    n_slow = int(params["n_slow"])
+    r = run(fp, cfg)
+    assert r.kiter[:n_slow].mean() < 0.6 * r.kiter[n_slow:].mean()
+
+
+def test_poisson2d_and_d_iteration_solve():
+    fp2 = make_solver("poisson2d", nx=8, ny=8, shift=0.5)
+    r = run(fp2, _cfg(eps=1e-6))
+    assert r.detected and r.true_res < 1e-6
+
+    # damped diffusion: the fixed point is a probability vector (sum 1)
+    fpd = make_solver("d_iteration", n=64, damping=0.85)
+    r = run(fpd, _cfg(eps=1e-7))
+    assert r.detected and r.true_res < 1e-7
+    assert abs(float(np.sum(r.x)) - 1.0) < 1e-3
+    assert (r.x >= -1e-6).all()  # nonnegative mass
+
+
+def test_d_iteration_contraction_matches_damping():
+    """The residual map is r -> damping * P r; P column-stochastic preserves
+    the 1-norm of nonnegative vectors, so the residual's 1-norm contracts by
+    exactly the damping factor each application (rho(|T|) = damping)."""
+    fp = make_solver("d_iteration", n=32, damping=0.7)
+    assert fp.contraction == 0.7
+    x = jnp.zeros((32,))
+    r0 = jnp.sum(jnp.abs(fp.full_map(x) - x))
+    y = fp.full_map(x)
+    r1 = jnp.sum(jnp.abs(fp.full_map(y) - y))
+    np.testing.assert_allclose(float(r1), 0.7 * float(r0), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Import-compat shims (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_core_shims_import_compat():
+    from repro.core import async_engine as ae
+    from repro.core import detection, solvers
+
+    assert ae.AsyncConfig is AsyncConfig
+    assert ae.run is run and ae.sweep is sweep
+    fp = solvers.poisson_1d(64, omega=1.0, shift=0.5, seed=0)
+    r = ae.run(fp, ae.AsyncConfig(p=4, detection="exact", eps=1e-5, max_ticks=50000))
+    assert r.detected
+    assert r.det_tick == r.ticks  # deprecated alias, no duplicated state
+    assert detection._BIG == RES_INIT
+    assert detection.ConvergenceMonitor is not None
+    assert solvers.FixedPoint is not None
+    assert "poisson2d" in solvers.SOLVERS
+
+
+def test_detection_shim_tick_functions_still_drive():
+    """Old-style inexact_init/inexact_tick calls (pre-registry surface)."""
+    from repro.core import detection
+
+    p = 4
+    st = detection.inexact_init(p)
+    mags = jnp.full((p,), 1e-9, jnp.float32)
+    fired = False
+    for _ in range(16):
+        st = detection.inexact_tick(st, mags, p=p, eps=1e-6)
+        fired = fired or bool(st["detected"])
+    assert fired
+
+
+def test_interval_protocol_needs_a_full_quiet_window():
+    """interval == inexact hardened: a single small instantaneous update
+    cannot certify; the window max must clear eps."""
+    from repro.asynchrony.protocols import Obs, get_protocol
+
+    p = 4
+    proto = get_protocol("interval")
+    cfg = _cfg(p=p, max_delay=2, window=0)  # window -> max_delay + 2 = 4
+    st = proto.init(p, 16, cfg)
+    big = jnp.full((p,), 1.0, jnp.float32)
+    small = jnp.full((p,), 1e-9, jnp.float32)
+
+    def obs(t, mags):
+        return Obs(
+            x=None, update_mag=mags, tick=jnp.int32(t), key=None, fp=None,
+            eps=1e-6, max_delay=2, msg_table=jnp.zeros((1,), jnp.int32),
+            coll_cycle_msgs=jnp.zeros((), jnp.int32),
+        )
+
+    t = 1
+    # big updates fill the window
+    for _ in range(6):
+        st, _ = proto.tick(st, obs(t, big))
+        t += 1
+    # one small tick: the window still contains big values -> no certify
+    st, _ = proto.tick(st, obs(t, small))
+    t += 1
+    assert not bool(st["detected"])
+    # a full quiet window (+ reduction cycles) -> certify
+    for _ in range(16):
+        st, _ = proto.tick(st, obs(t, small))
+        t += 1
+    assert bool(st["detected"])
