@@ -100,7 +100,29 @@ def run_sweeps(n: int, p: int, seeds, models, eps: float):
     return rows
 
 
-def main(json_path: str = "BENCH_async.json", quick: bool = False):
+def check_rows(rows) -> int:
+    """CI sanity (wired behind ``--check``): every *detected* realizable
+    async protocol must stop at or after the oracle — a negative detection
+    delay would mean certifying convergence before the ground truth reached
+    eps, i.e. an unsound detector.  ``sync`` is excluded (it runs a
+    different, delay-free environment, so its delta is an environment gap,
+    not a detection delay).  Returns the number of rows checked."""
+    checked = 0
+    for r in rows:
+        if r.get("undetected") or r["protocol"] in ("oracle", "sync"):
+            continue
+        assert r["detection_delay_ticks"] >= 0, (
+            f"unsound: {r['name']} stopped {-r['detection_delay_ticks']} "
+            f"ticks before the oracle"
+        )
+        assert np.isfinite(r["worst_true_res"]), r
+        checked += 1
+    assert checked > 0, "no detected protocol rows to sanity-check"
+    return checked
+
+
+def main(json_path: str = "BENCH_async.json", quick: bool = False,
+         check: bool = False):
     n = 256 if quick else 512
     p = 4 if quick else 8
     n_seeds = 4 if quick else 16
@@ -120,6 +142,9 @@ def main(json_path: str = "BENCH_async.json", quick: bool = False):
     with open(json_path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"# wrote {json_path}")
+    if check:
+        n = check_rows(rows)
+        print(f"# sanity OK: detection delay >= oracle on {n} rows")
 
 
 if __name__ == "__main__":
@@ -129,5 +154,10 @@ if __name__ == "__main__":
         "--quick", action="store_true",
         help="reduced sweep (CI smoke): fewer models, seeds, smaller problem",
     )
+    ap.add_argument(
+        "--check", action="store_true",
+        help="sanity-assert the sweep (every detected realizable protocol "
+             "stops at or after the oracle) — wired into CI",
+    )
     args = ap.parse_args()
-    main(json_path=args.json, quick=args.quick)
+    main(json_path=args.json, quick=args.quick, check=args.check)

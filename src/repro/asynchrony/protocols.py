@@ -65,6 +65,22 @@ def _sim_plan(p: int) -> plans.CollectivePlan:
     return plans.allreduce_plan(schedule="mrd", p=p, op="max")
 
 
+def _take_ranks(arr, keep, fill, axis: int = 0):
+    """Select worker rows along ``axis`` per the resize ``keep`` map.
+
+    ``keep[i]`` is the old rank now at new rank ``i`` (None = a joined
+    worker, which gets ``fill``).  Works for any rank-axis position —
+    ``res_loc [p]``, ``win [W, p]``, stacked monitor rows ``[dp, ...]``.
+    """
+    parts = []
+    for k in keep:
+        if k is None:
+            parts.append(jnp.full_like(jnp.take(arr, 0, axis=axis), fill))
+        else:
+            parts.append(jnp.take(arr, int(k), axis=axis))
+    return jnp.stack(parts, axis=axis)
+
+
 def _stage_msgs(msg_table, stage):
     return msg_table[jnp.minimum(stage, msg_table.shape[0] - 1)]
 
@@ -98,6 +114,25 @@ class _ProtocolBase:
     def finalize(self, state, x):
         """Solution to report at termination (default: the live iterate)."""
         return x.reshape(x.shape[:-2] + (-1,)) if x.ndim > 2 else x.reshape(-1)
+
+    # -- elastic resize (DESIGN.md S12) --------------------------------------
+
+    def migrate(self, state, keep, new_p: int, m: int, cfg):
+        """Re-lay-out protocol state after the worker set changes.
+
+        ``keep[i]`` = old rank now at new rank ``i`` (None = joined).
+        The in-flight non-blocking reduction is abandoned — its stage
+        counter and partial combines are meaningless at the new extent,
+        and the MRD plan at ``new_p`` has a different cycle length — while
+        everything certified so far (``res_norm``, ``detected``) and
+        per-worker latches survive.  Subclasses extend this for their
+        extra per-worker state.
+        """
+        new = self.init(new_p, m, cfg)
+        for k_ in ("res_norm", "detected"):
+            if k_ in new and k_ in state:
+                new[k_] = state[k_]
+        return new
 
     # -- training-loop policy (optional) ------------------------------------
 
@@ -142,6 +177,13 @@ class InexactProtocol(_ProtocolBase):
             "nb": nb, "res_loc": res_loc,
             "res_norm": res_norm, "detected": detected,
         }, msgs
+
+    def migrate(self, state, keep, new_p, m, cfg):
+        new = super().migrate(state, keep, new_p, m, cfg)
+        # surviving workers re-latch their last contribution on the next
+        # cycle start; joiners start at the RES_INIT sentinel
+        new["res_loc"] = _take_ranks(state["res_loc"], keep, RES_INIT)
+        return new
 
     def monitor_init(self, metric0):
         return {}
@@ -216,6 +258,15 @@ class ExactProtocol(_ProtocolBase):
     def finalize(self, state, x):
         return state["xbar"]
 
+    def migrate(self, state, keep, new_p, m, cfg):
+        new = super().migrate(state, keep, new_p, m, cfg)
+        # an in-progress snapshot is a cut of the *old* worker set —
+        # discard it (a fresh one starts next tick); the last certified
+        # x̄ carries over when the global problem size is unchanged
+        if state["xbar"].shape == new["xbar"].shape:
+            new["xbar"] = state["xbar"]
+        return new
+
     def monitor_init(self, metric0):
         return {"latched": metric0}
 
@@ -264,6 +315,14 @@ class IntervalProtocol(_ProtocolBase):
             "nb": nb, "win": win, "res_loc": res_loc,
             "res_norm": res_norm, "detected": detected,
         }, msgs
+
+    def migrate(self, state, keep, new_p, m, cfg):
+        new = super().migrate(state, keep, new_p, m, cfg)
+        new["res_loc"] = _take_ranks(state["res_loc"], keep, RES_INIT)
+        # per-worker window columns follow their workers; joiners start
+        # saturated so they cannot certify before filling a whole window
+        new["win"] = _take_ranks(state["win"], keep, RES_INIT, axis=1)
+        return new
 
     def monitor_init(self, metric0, window: int = 8):
         return {"win": jnp.broadcast_to(metric0, (window,)).astype(jnp.float32)}
@@ -401,6 +460,33 @@ class ConvergenceMonitor:
         if not varying:
             return state
         return jax.tree.map(lambda x: compat.pvary(x, self._axes()), state)
+
+    def migrate_rows(self, rows, keep):
+        """Elastic resize of replicated-then-sharded monitor state.
+
+        ``rows`` is the ``[dp, ...]``-leaved pytree built by
+        ``monitor_rows_init``; ``keep[i]`` is the old DP rank now at new
+        rank ``i`` (None = joined worker, which gets a fresh row).  The
+        per-rank policy state (``m`` — the exact-mode latch, the interval
+        window), the certified ``value`` and the ``done`` latch follow
+        their workers; the staged non-blocking reduction restarts from
+        stage 0 because the MRD cycle length at the new extent differs
+        and a mid-cycle partial combine would mix extents.
+        """
+        fresh = self.init(varying=False)
+
+        def sel(rows_leaf, fresh_leaf):
+            parts = [
+                rows_leaf[k] if k is not None else fresh_leaf for k in keep
+            ]
+            return jnp.stack([jnp.asarray(x) for x in parts])
+
+        migrated = jax.tree.map(sel, rows, fresh)
+        migrated["nb"] = jax.tree.map(
+            lambda f: jnp.broadcast_to(f, (len(keep),) + f.shape),
+            fresh["nb"],
+        )
+        return migrated
 
     def step(self, state, local_metric, step_idx):
         local_metric = local_metric.astype(jnp.float32)

@@ -14,6 +14,10 @@ Layout:  <dir>/step_<N>/   arrays.npz  (flat {path: np.array})
   different mesh than the save-time mesh) and uses ``jax.device_put`` per
   leaf; combined with the MRD collectives' non-power-of-two support this is
   the shrink-on-failure path (see runtime/fault_tolerance.py).
+- *layout versioning*: the manifest records ``layout_version`` and restore
+  runs the registered migration passes from the checkpoint's version up to
+  :data:`LAYOUT_VERSION`, so checkpoints written before a state-layout
+  change keep restoring (see :func:`migrate_layout`).
 """
 
 from __future__ import annotations
@@ -23,10 +27,19 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import numpy as np
+
+# Current on-disk state layout.  History:
+#   1: pre-PR-3 — flat optimizer {master, mu, nu}; ConvergenceMonitor
+#      policy state at the top level of the monitor dict (e.g.
+#      'monitor/latched' for the exact mode).
+#   2: PR-3 — EF-SGD residual carry adds an 'opt/ef' leaf to compressed
+#      runs; the monitor's per-protocol policy state moved under 'm/'
+#      ('monitor/latched' -> 'monitor/m/latched', new 'monitor/m/win').
+LAYOUT_VERSION = 2
 
 
 def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
@@ -56,6 +69,72 @@ def _unflatten_like(template, flat: dict[str, np.ndarray]):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _template_specs(template) -> dict[str, Any]:
+    """{flat key: leaf} for the restore template (shapes/dtypes only)."""
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(template)[0]:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey) else str(p.idx)
+            for p in path
+        )
+        out[key] = leaf
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Layout migrations: version N -> N+1 passes over the flat array dict
+# ---------------------------------------------------------------------------
+
+
+def _migrate_v1_to_v2(flat: dict, template_specs: dict) -> dict:
+    """Pre-PR-3 checkpoints: monitor policy state moves under ``m/`` and
+    compressed runs gain a zero ``opt/ef`` residual (a fresh EF carry is
+    exactly what a run that never compensated anything should hold)."""
+    out = dict(flat)
+    for key, spec in template_specs.items():
+        if key in out:
+            continue
+        parts = key.split("/")
+        if "m" in parts:
+            i = parts.index("m")
+            old_key = "/".join(parts[:i] + parts[i + 1 :])
+            if old_key in out:
+                out[key] = out.pop(old_key)
+                continue
+        if parts[-1] == "ef" and "opt" in parts:
+            out[key] = np.zeros(tuple(spec.shape), spec.dtype)
+    return out
+
+
+_MIGRATIONS: Dict[int, Callable] = {1: _migrate_v1_to_v2}
+
+
+def migrate_layout(
+    flat: dict, template, from_version: int, to_version: int = LAYOUT_VERSION
+) -> dict:
+    """Run the registered migration passes ``from_version -> to_version``
+    over a checkpoint's flat array dict, then verify every template leaf is
+    present (clear error instead of a KeyError deep in unflatten)."""
+    if from_version > to_version:
+        raise ValueError(
+            f"checkpoint layout v{from_version} is newer than this code's "
+            f"v{to_version}; upgrade the code, not the checkpoint"
+        )
+    specs = _template_specs(template)
+    for v in range(from_version, to_version):
+        if v not in _MIGRATIONS:
+            raise ValueError(f"no layout migration registered for v{v} -> v{v + 1}")
+        flat = _MIGRATIONS[v](flat, specs)
+    missing = sorted(k for k in specs if k not in flat)
+    if missing:
+        raise ValueError(
+            f"checkpoint (layout v{from_version}) is missing {len(missing)} "
+            f"leaves the restore template expects even after migration to "
+            f"v{to_version}: {missing[:8]}{'...' if len(missing) > 8 else ''}"
+        )
+    return flat
+
+
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
@@ -73,6 +152,7 @@ class Checkpointer:
             "time": time.time(),
             "extra": extra or {},
             "n_arrays": len(flat),
+            "layout_version": LAYOUT_VERSION,
         }
 
         def _write():
@@ -133,10 +213,19 @@ class Checkpointer:
 
     def restore(self, step: int, template: Any, shardings: Any = None):
         """Load into the structure of ``template``; optionally re-place onto
-        ``shardings`` (a pytree of NamedSharding for a possibly-new mesh)."""
+        ``shardings`` (a pytree of NamedSharding for a possibly-new mesh).
+        Checkpoints written under an older state layout are migrated
+        through the versioned passes first (:func:`migrate_layout`)."""
         d = os.path.join(self.dir, f"step_{step}")
         with np.load(os.path.join(d, "arrays.npz")) as z:
             flat = {k: z[k] for k in z.files}
+        version = 1
+        mpath = os.path.join(d, "manifest.json")
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                version = json.load(f).get("layout_version", 1)
+        if version != LAYOUT_VERSION:
+            flat = migrate_layout(flat, template, version)
         state = _unflatten_like(template, flat)
         if shardings is not None:
             state = jax.tree.map(jax.device_put, state, shardings)

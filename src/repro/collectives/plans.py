@@ -28,6 +28,7 @@ same code path as a single axis.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -118,6 +119,54 @@ def _run_phase(x, collective: str, be, p: int, op: Callable, tf):
 
 
 # ---------------------------------------------------------------------------
+# Live-plan tracking (elastic resize invalidation hook, DESIGN.md S12)
+#
+# Plans memoize derived state (backends, bound stage tables) per instance.
+# A mesh resize changes axis sizes out from under long-lived plan objects;
+# the elastic runtime calls invalidate_all_plans() at each ResizeEvent so
+# every live plan rebuilds its derivations on next use.  A plain weakref
+# list (not a WeakSet — frozen-dataclass equality would collapse distinct
+# instances with equal fields) tracks liveness without pinning plans.
+# ---------------------------------------------------------------------------
+
+_LIVE_PLANS: list = []
+_PRUNE_THRESHOLD = 256
+
+
+def _track_plan(plan) -> None:
+    global _PRUNE_THRESHOLD
+    _LIVE_PLANS.append(weakref.ref(plan))
+    # amortized prune: long-running non-elastic workloads construct plans
+    # indefinitely and never call invalidate_all_plans(), so dead refs
+    # must not accumulate unboundedly
+    if len(_LIVE_PLANS) >= _PRUNE_THRESHOLD:
+        _LIVE_PLANS[:] = [r for r in _LIVE_PLANS if r() is not None]
+        _PRUNE_THRESHOLD = max(256, 2 * len(_LIVE_PLANS))
+
+
+def live_plans() -> list:
+    """Currently alive CollectivePlan instances (prunes dead refs)."""
+    alive = []
+    kept = []
+    for ref in _LIVE_PLANS:
+        p = ref()
+        if p is not None:
+            alive.append(p)
+            kept.append(ref)
+    _LIVE_PLANS[:] = kept
+    return alive
+
+
+def invalidate_all_plans() -> int:
+    """Invalidate every live plan's memoized derivations (mesh resize
+    hook).  Returns the number of plans invalidated."""
+    plans_alive = live_plans()
+    for p in plans_alive:
+        p.invalidate()
+    return len(plans_alive)
+
+
+# ---------------------------------------------------------------------------
 # CollectivePlan
 # ---------------------------------------------------------------------------
 
@@ -148,6 +197,7 @@ class CollectivePlan:
         if self.axes is not None and isinstance(self.axes, str):
             object.__setattr__(self, "axes", (self.axes,))
         self._transform().validate_op(self.op)
+        _track_plan(self)
 
     # -- layer resolution ---------------------------------------------------
     #
@@ -166,6 +216,16 @@ class CollectivePlan:
         if key not in memo:
             memo[key] = build()
         return memo[key]
+
+    def invalidate(self):
+        """Drop every memoized derivation (resolved backends, bound stage
+        tables, cached permute specs) so the next use rebuilds against the
+        current mesh/axis sizes.  The elastic runtime calls
+        :func:`invalidate_all_plans` after a resize — device-axis plans
+        re-resolve sizes per trace anyway (memo keys include the resolved
+        sizes), so this is a hard guarantee plus a memory release for
+        stage tables of extents that no longer exist."""
+        self.__dict__.pop("_memo_cache", None)
 
     def _n_axes(self) -> int:
         return len(self.axes) if self.axes is not None else 1

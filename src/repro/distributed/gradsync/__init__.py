@@ -26,9 +26,16 @@ call :func:`register`, import it below.
 
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional, Sequence
 
 GRAD_SYNC: Dict[str, Callable] = {}
+
+# Elastic resize hooks (DESIGN.md S12): per-strategy state migration
+# ``hook(cfg, tcfg, old_mesh, new_mesh, state, keep) -> new_state`` where
+# ``keep[i]`` is the old flattened-DP rank now at new rank ``i`` (None =
+# freshly joined worker).  The returned state is host-side (unplaced);
+# the elastic controller device_puts it onto the new mesh's shardings.
+GRAD_SYNC_RESIZE: Dict[str, Callable] = {}
 
 
 def register(name: str):
@@ -36,6 +43,16 @@ def register(name: str):
 
     def deco(fn: Callable) -> Callable:
         GRAD_SYNC[name] = fn
+        return fn
+
+    return deco
+
+
+def register_resize(name: str):
+    """Decorator: register a strategy's elastic resize hook under ``name``."""
+
+    def deco(fn: Callable) -> Callable:
+        GRAD_SYNC_RESIZE[name] = fn
         return fn
 
     return deco
@@ -65,6 +82,28 @@ def make_step_factory(cfg, tcfg) -> Callable:
     """``mesh -> (train_step, init_state, state_specs, rules)`` — the shape
     elastic/fault-tolerant controllers rebuild on every topology change."""
     return lambda mesh: make_train_step(cfg, mesh, tcfg)
+
+
+def migrate_state(
+    cfg, tcfg, old_mesh, new_mesh, state, keep: Sequence[Optional[int]]
+):
+    """Migrate a live train state across a mesh resize **in place** — no
+    checkpoint round-trip — by dispatching to ``tcfg.grad_sync``'s
+    registered resize hook.
+
+    ``keep`` maps new flattened-DP ranks to old ones (None = joined
+    worker).  Every hook re-lays-out whatever its strategy shards over DP
+    (the ZeRO-1 master/moment rows, the EF residual carry, monitor rows)
+    and leaves replicated leaves untouched; the result is host-side
+    arrays ready for ``jax.device_put`` onto the new mesh's shardings.
+    """
+    name = tcfg.grad_sync
+    if name not in GRAD_SYNC_RESIZE:
+        raise ValueError(
+            f"grad_sync {name!r} has no registered resize hook; "
+            f"registered: {sorted(GRAD_SYNC_RESIZE)}"
+        )
+    return GRAD_SYNC_RESIZE[name](cfg, tcfg, old_mesh, new_mesh, state, keep)
 
 
 # populate the registry (import order = doc order)

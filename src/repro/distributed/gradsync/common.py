@@ -148,6 +148,17 @@ def monitor_rows_init(monitor: Optional[ConvergenceMonitor], dp: int):
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (dp,) + x.shape), mon)
 
 
+def monitor_rows_migrate(tcfg: TrainConfig, rules, rows, keep):
+    """Elastic resize of the ``state['monitor']`` rows (or None pass-through):
+    surviving rows follow their workers, joiners get fresh rows, and the
+    staged reduction restarts (see
+    :meth:`repro.asynchrony.ConvergenceMonitor.migrate_rows`)."""
+    monitor = build_monitor(tcfg, rules)
+    if monitor is None or rows is None:
+        return rows
+    return monitor.migrate_rows(rows, keep)
+
+
 def local_monitor_tick(monitor, mon_state, metric, step):
     """Inside shard_map: advance this rank's monitor row ([1, ...] leaves).
 

@@ -14,7 +14,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.distributed import sharding as shd
-from repro.distributed.gradsync import common, register
+from repro.distributed.gradsync import common, register, register_resize
 from repro.distributed.gradsync.common import TrainConfig
 from repro.models import transformer
 from repro.models.config import ModelConfig
@@ -105,3 +105,17 @@ def make(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
         return new_state, out_metrics
 
     return train_step, init_state, state_specs, rules
+
+
+@register_resize("gspmd")
+def resize(cfg, tcfg, old_mesh, new_mesh, state, keep):
+    """Elastic resize: params/opt are mesh-shape-independent global arrays
+    (XLA re-partitions them under the new mesh's shardings); only the
+    per-DP-rank monitor rows need re-laying-out."""
+    new_state = dict(state)
+    if "monitor" in state:
+        rules_n = shd.make_rules(cfg, new_mesh, fsdp=tcfg.fsdp)
+        new_state["monitor"] = common.monitor_rows_migrate(
+            tcfg, rules_n, state["monitor"], keep
+        )
+    return new_state

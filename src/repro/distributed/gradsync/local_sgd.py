@@ -19,7 +19,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.collectives import plans
 from repro.distributed import sharding as shd
-from repro.distributed.gradsync import common, register
+from repro.distributed.gradsync import common, register, register_resize
 from repro.distributed.gradsync.common import TrainConfig
 from repro.models import transformer
 from repro.models.config import ModelConfig
@@ -107,3 +107,20 @@ def make(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
         }
 
     return train_step, init_state, state_specs, rules
+
+
+@register_resize("local_sgd")
+def resize(cfg, tcfg, old_mesh, new_mesh, state, keep):
+    """Elastic resize: params/opt are dp-major replica rows.  Surviving
+    replicas follow their workers; a joiner clones the first survivor's
+    replica (it has no local history of its own — the next
+    ``local_sync_every`` boundary folds it into the average anyway)."""
+    src = next(k for k in keep if k is not None)
+
+    def sel(rows):
+        return jnp.stack([rows[k if k is not None else src] for k in keep])
+
+    new_state = dict(state)
+    new_state["params"] = jax.tree.map(sel, state["params"])
+    new_state["opt"] = jax.tree.map(sel, state["opt"])
+    return new_state

@@ -27,7 +27,7 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.collectives import plans
 from repro.distributed import sharding as shd
-from repro.distributed.gradsync import common, register
+from repro.distributed.gradsync import common, register, register_resize
 from repro.distributed.gradsync.common import TrainConfig
 from repro.models import transformer
 from repro.models.config import ModelConfig
@@ -118,3 +118,16 @@ def make(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
         }
 
     return train_step, init_state, state_specs, rules
+
+
+@register_resize("mrd_leaf")
+def resize(cfg, tcfg, old_mesh, new_mesh, state, keep):
+    """Elastic resize: the tree-shaped optimizer is DP-replicated, so any
+    survivor's copy is the state; only the monitor rows re-lay-out."""
+    new_state = dict(state)
+    if "monitor" in state:
+        rules_n = shd.make_rules(cfg, new_mesh, fsdp=False)
+        new_state["monitor"] = common.monitor_rows_migrate(
+            tcfg, rules_n, state["monitor"], keep
+        )
+    return new_state

@@ -32,7 +32,7 @@ from repro import compat
 from repro.collectives import buckets, plans
 from repro.collectives.schedules import pivot
 from repro.distributed import sharding as shd
-from repro.distributed.gradsync import common, register
+from repro.distributed.gradsync import common, register, register_resize
 from repro.distributed.gradsync.common import TrainConfig
 from repro.models import transformer
 from repro.models.config import ModelConfig
@@ -113,6 +113,53 @@ def zero1_masters_from_params(
         for o in owners
     ]
     return jnp.stack(rows)
+
+
+def zero1_gather_buckets(rows, layout, owners, prod_p0: int) -> list:
+    """Reassemble full per-bucket buffers from owner-sharded ``[dp, m]`` rows
+    (each owner row concatenates its per-bucket segments in bucket order) —
+    the inverse of the scatter in :func:`zero1_masters_from_params`."""
+    rank_of = {seg: r for r, seg in enumerate(owners) if seg is not None}
+    bufs, shard_off = [], 0
+    for blen in layout.bucket_lengths:
+        seg = blen // prod_p0
+        bufs.append(
+            jnp.concatenate(
+                [rows[rank_of[s], shard_off : shard_off + seg]
+                 for s in range(prod_p0)]
+            )
+        )
+        shard_off += seg
+    return bufs
+
+
+def zero1_scatter_buckets(bufs, layout, owners, prod_p0: int) -> jnp.ndarray:
+    """Shard full per-bucket buffers back into owner rows ``[dp, m]``
+    (non-owner ranks of a non-power-of-two extent get zero rows, matching
+    :func:`zero1_masters_from_params`)."""
+    seg_bufs = [b.reshape(prod_p0, -1) for b in bufs]
+    m = layout.total_padded // prod_p0
+    dtype = bufs[0].dtype if bufs else jnp.float32
+    rows = [
+        jnp.concatenate([sb[o] for sb in seg_bufs])
+        if o is not None
+        else jnp.zeros((m,), dtype)
+        for o in owners
+    ]
+    return jnp.stack(rows)
+
+
+def zero1_regrid(bufs, layout_old, layout_new) -> list:
+    """Re-bucket full flat buffers from one layout to another.
+
+    Both layouts cover the same (fp32 view of the) parameter tree; only
+    the per-bucket padding differs (the pad quantum scales with the RS
+    pivot product, which changes on resize).  Pad regions carry exact
+    zeros throughout training — gradients, moments and EF residuals are
+    all zero there by construction — so dropping the old padding and
+    re-padding with zeros is bit-exact for every live coordinate.
+    """
+    return buckets.pack(buckets.unpack(bufs, layout_old), layout_new)
 
 
 def zero1_owner_segments(mesh: Mesh, dp_axes) -> list:
@@ -359,3 +406,105 @@ def make_zero1(
 @register("mrd_zero1")
 def make(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
     return make_zero1(cfg, mesh, tcfg)
+
+
+# ---------------------------------------------------------------------------
+# Elastic resize (DESIGN.md S12): in-place ZeRO-1 shard re-layout
+# ---------------------------------------------------------------------------
+
+
+def resize_zero1(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    old_mesh: Mesh,
+    new_mesh: Mesh,
+    state,
+    keep,
+    *,
+    paper_mode: bool = False,
+):
+    """Migrate a live zero1/paper/compressed train state across a resize
+    without a checkpoint round-trip.
+
+    Params are DP-replicated (any survivor holds them — the controller
+    broadcasts to joiners over an MRD plan at the new extent).  The fp32
+    master/moment rows are owner-segment sharded over the *old* pivot
+    product; we reassemble the full flat vectors from the surviving
+    owners, re-bucket for the new extent's layout (:func:`zero1_regrid` —
+    bit-exact, pad regions are structurally zero), and re-scatter onto
+    the new owner segments.  The EF-SGD residual is per-worker state and
+    follows its worker via ``keep`` (joiners start with a zero residual —
+    they have sent nothing to compensate for).  Monitor rows migrate via
+    the detection-protocol layer.
+    """
+    rules_o = shd.make_rules(cfg, old_mesh, fsdp=False)
+    rules_n = shd.make_rules(cfg, new_mesh, fsdp=False)
+    pshape = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0))
+    )
+    layout_o, prod_o = zero1_layout(
+        pshape, old_mesh, rules_o.dp_axes, bucket_bytes=tcfg.bucket_bytes
+    )
+    layout_n, prod_n = zero1_layout(
+        pshape, new_mesh, rules_n.dp_axes, bucket_bytes=tcfg.bucket_bytes
+    )
+    owners_o = zero1_owner_segments(old_mesh, rules_o.dp_axes)
+    owners_n = zero1_owner_segments(new_mesh, rules_n.dp_axes)
+    bounds_o = list(np.cumsum(layout_o.bucket_lengths)[:-1])
+    dp_n = rules_n.dp
+
+    opt = state["opt"]
+    new_opt = {}
+    for name in ("master", "mu", "nu"):
+        rows = jnp.asarray(opt[name])
+        if paper_mode:
+            # fully replicated rows: re-bucket one survivor's copy
+            full = zero1_regrid(
+                jnp.split(rows[0], bounds_o), layout_o, layout_n
+            )
+            flat = jnp.concatenate(full)
+            new_opt[name] = jnp.broadcast_to(flat, (dp_n, flat.shape[0]))
+        else:
+            bufs = zero1_gather_buckets(rows, layout_o, owners_o, prod_o)
+            bufs = zero1_regrid(bufs, layout_o, layout_n)
+            new_opt[name] = zero1_scatter_buckets(bufs, layout_n, owners_n, prod_n)
+    if "ef" in opt:
+        ef_rows = jnp.asarray(opt["ef"])
+        zero_row = None
+        rows_out = []
+        for k in keep:
+            if k is None:
+                if zero_row is None:
+                    zero_row = jnp.zeros((layout_n.total_padded,), jnp.float32)
+                rows_out.append(zero_row)
+            else:
+                regridded = zero1_regrid(
+                    jnp.split(ef_rows[int(k)], bounds_o), layout_o, layout_n
+                )
+                rows_out.append(jnp.concatenate(regridded))
+        new_opt["ef"] = jnp.stack(rows_out)
+
+    new_state = dict(state)
+    new_state["opt"] = new_opt
+    if "monitor" in state:
+        new_state["monitor"] = common.monitor_rows_migrate(
+            tcfg, rules_n, state["monitor"], keep
+        )
+    return new_state
+
+
+@register_resize("mrd_zero1")
+def _resize(cfg, tcfg, old_mesh, new_mesh, state, keep):
+    return resize_zero1(cfg, tcfg, old_mesh, new_mesh, state, keep)
+
+
+@register_resize("mrd_paper")
+def _resize_paper(cfg, tcfg, old_mesh, new_mesh, state, keep):
+    return resize_zero1(
+        cfg, tcfg, old_mesh, new_mesh, state, keep, paper_mode=True
+    )
+
+
+@register_resize("compressed")
+def _resize_compressed(cfg, tcfg, old_mesh, new_mesh, state, keep):
+    return resize_zero1(cfg, tcfg, old_mesh, new_mesh, state, keep)

@@ -68,6 +68,38 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh):
     return serve_step, rules
 
 
+def make_cached_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    """Single-dispatch prefill that fills the decode cache.
+
+    Scans the decode step over the prompt inside one jitted program —
+    replacing the launcher's historical per-token Python loop (one XLA
+    dispatch *per prompt token*) with a single ``lax.scan`` dispatch.
+    Token-for-token the math is the decode step's own, so the resulting
+    cache and last-position logits match the per-token loop.
+
+    Returns ``prefill_step(params, prompt [B, S], cache) ->
+    (last_logits [B, V], cache)``.
+    """
+    serve_step, rules = make_serve_step(cfg, mesh)
+
+    def prefill_step(params, prompt, cache):
+        S = prompt.shape[1]
+
+        def body(c, xs):
+            tok, i = xs
+            logits, c = serve_step(params, tok, c, i)
+            return c, logits
+
+        cache_out, logits = jax.lax.scan(
+            body, cache,
+            (prompt.T, jnp.arange(S, dtype=jnp.int32)),
+            unroll=1,
+        )
+        return logits[-1], cache_out
+
+    return prefill_step, rules
+
+
 def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
     """Prefill: full forward, returns last-position logits [B, V]."""
     rules = shd.make_rules(cfg, mesh, fsdp=_serve_needs_fsdp(cfg, mesh))

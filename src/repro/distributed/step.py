@@ -43,6 +43,7 @@ from repro.distributed.gradsync.mrd_zero1 import (  # noqa: F401
 )
 from repro.distributed.serve import (  # noqa: F401
     cache_specs,
+    make_cached_prefill_step,
     make_prefill_step,
     make_serve_step,
 )

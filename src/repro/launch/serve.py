@@ -39,6 +39,7 @@ def main(argv=None):
         raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
     mesh = build_mesh(args.dp, args.tp)
     serve_step, rules = step_lib.make_serve_step(cfg, mesh)
+    prefill_step, _ = step_lib.make_cached_prefill_step(cfg, mesh)
 
     with mesh:
         params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -48,12 +49,11 @@ def main(argv=None):
             jax.random.PRNGKey(args.seed + 1), (args.batch, args.prompt_len), 0, cfg.vocab
         )
         jstep = jax.jit(serve_step, donate_argnums=(2,))
+        jprefill = jax.jit(prefill_step, donate_argnums=(2,))
 
-        # prefill by token-stepping the prompt (demo scale), then generate
-        toks = prompt[:, 0]
+        # single-dispatch prefill (scanned decode steps), then generate
         t0 = time.time()
-        for i in range(args.prompt_len):
-            logits, cache = jstep(params, prompt[:, i], cache, jnp.int32(i))
+        logits, cache = jprefill(params, prompt, cache)
         out = []
         toks = jnp.argmax(logits, -1).astype(jnp.int32)
         for i in range(args.gen):

@@ -63,6 +63,11 @@ def main(argv=None):
                     help="never donate the train state to jit (donation is "
                          "already skipped on CPU, where it deadlocks "
                          "shard_map strategies like mrd_leaf)")
+    ap.add_argument("--elastic-policy", default=None,
+                    help="drive training through the elastic runtime with "
+                         "this resize policy (any ELASTIC_POLICIES entry: "
+                         "static | shrink_on_failure | grow_on_join | "
+                         "drain_straggler); default: plain train loop")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
@@ -91,8 +96,35 @@ def main(argv=None):
             total_steps=args.steps,
         ),
     )
-    train_step, init_state, state_specs, rules = step_lib.make_train_step(cfg, mesh, tcfg)
     ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+
+    if args.elastic_policy is not None:
+        # policy-driven elastic runtime (DESIGN.md S12): failures shrink the
+        # DP extent in place, joiners grow it; the MRD collectives keep every
+        # resulting (non-power-of-two) extent correct.
+        from repro.data.pipeline import DataConfig as _DC
+        from repro.runtime import ElasticConfig, ElasticTrainer, get_policy
+
+        get_policy(args.elastic_policy)  # fail fast on unknown names
+        trainer = ElasticTrainer(
+            mesh, (cfg, tcfg),
+            pipe_factory=lambda m: SyntheticPipeline(
+                cfg, _DC(batch=args.batch, seq_len=args.seq, seed=args.seed), m
+            ),
+            checkpointer=ck,
+            cfg=ElasticConfig(
+                ckpt_every=args.ckpt_every, policy=args.elastic_policy
+            ),
+        )
+        state = trainer.init_or_restore(jax.random.PRNGKey(args.seed))
+        state, losses = trainer.run(state, args.steps)
+        print(
+            f"done ({len(trainer.resizes)} resizes, {trainer.restores} "
+            f"checkpoint restores). final loss: {losses[-1]:.4f}"
+        )
+        return losses[-1]
+
+    train_step, init_state, state_specs, rules = step_lib.make_train_step(cfg, mesh, tcfg)
 
     with mesh:
         state = init_state(jax.random.PRNGKey(args.seed))

@@ -1,0 +1,24 @@
+"""Runtime layer: fault tolerance + the elastic resize runtime (DESIGN.md
+S12).  ``ELASTIC_POLICIES`` mirrors the repo's other registries — resolve
+by name, extend with ``@register_policy``."""
+
+from repro.runtime.elastic import (  # noqa: F401
+    ElasticConfig,
+    ElasticTrainer,
+    ResizeEvent,
+    mrd_broadcast,
+)
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    FailureDetector,
+    HeartbeatConfig,
+    StepClock,
+    grow_mesh,
+    shrink_mesh,
+)
+from repro.runtime.policies import (  # noqa: F401
+    ELASTIC_POLICIES,
+    ResizeDecision,
+    available,
+    get_policy,
+    register_policy,
+)

@@ -36,9 +36,10 @@ class FailureDetector:
     """Tracks per-worker heartbeats (host side).  Deterministic: the clock is
     injected, so tests drive it explicitly."""
 
-    def __init__(self, workers: list[int], cfg: HeartbeatConfig):
+    def __init__(self, workers: list[int], cfg: HeartbeatConfig,
+                 now: float = 0.0):
         self.cfg = cfg
-        self.last: dict[int, float] = {w: 0.0 for w in workers}
+        self.last: dict[int, float] = {w: now for w in workers}
         self.step_times: dict[int, list[float]] = {w: [] for w in workers}
         self.straggler_strikes: dict[int, int] = {w: 0 for w in workers}
 
@@ -47,6 +48,25 @@ class FailureDetector:
         if step_time is not None:
             self.step_times[worker].append(step_time)
             self.step_times[worker] = self.step_times[worker][-32:]
+
+    def mark_dead(self, worker: int):
+        """Fail-stop notification: the worker is known dead *now* (crash
+        report, exit code), not merely silent — ``failed()`` reports it
+        immediately instead of after ``timeout_s``."""
+        if worker in self.last:
+            self.last[worker] = float("-inf")
+
+    def add_worker(self, worker: int, now: float):
+        """Start tracking a joining worker (grow path)."""
+        self.last.setdefault(worker, now)
+        self.step_times.setdefault(worker, [])
+        self.straggler_strikes.setdefault(worker, 0)
+
+    def remove_worker(self, worker: int):
+        """Stop tracking an evicted worker (shrink path)."""
+        self.last.pop(worker, None)
+        self.step_times.pop(worker, None)
+        self.straggler_strikes.pop(worker, None)
 
     def failed(self, now: float) -> list[int]:
         return [w for w, t in self.last.items() if now - t > self.cfg.timeout_s]
@@ -86,6 +106,63 @@ def shrink_mesh(mesh, failed_device_ids: set[int], dp_axis: str = "data"):
     new_grid = np.moveaxis(grid[keep], 0, dp_idx)
     new_mesh = jax.sharding.Mesh(new_grid, axis_names)
     return new_mesh, keep
+
+
+def grow_mesh(mesh, joining_device_ids, dp_axis: str = "data"):
+    """Rebuild the mesh with joining devices appended along the DP axis.
+
+    The inverse of :func:`shrink_mesh`: surviving DP slices keep their
+    positions (ranks 0..dp_old-1), joiners form new trailing slices.  The
+    joining device count must be a multiple of the per-slice device count
+    (the product of the non-DP extents) so each new slice is complete.
+    Any resulting extent — including non-power-of-two — is handled
+    natively by the MRD collectives.  Returns (new_mesh, n_new_slices).
+    """
+    axis_names = list(mesh.axis_names)
+    dev_grid = np.asarray(mesh.devices)
+    dp_idx = axis_names.index(dp_axis)
+    grid = np.moveaxis(dev_grid, dp_idx, 0)
+    slice_shape = grid.shape[1:]
+    per_slice = int(np.prod(slice_shape, dtype=np.int64)) if slice_shape else 1
+    by_id = {d.id: d for d in jax.devices()}
+    present = {d.id for d in np.ravel(dev_grid)}
+    joiners = []
+    for did in joining_device_ids:
+        if did in present:
+            raise ValueError(f"device {did} is already in the mesh")
+        if did not in by_id:
+            raise ValueError(f"no such device id {did}")
+        joiners.append(by_id[did])
+    if not joiners or len(joiners) % per_slice:
+        raise ValueError(
+            f"need a positive multiple of {per_slice} joining devices to "
+            f"form whole DP slices, got {len(joiners)}"
+        )
+    new_slices = np.asarray(joiners, dtype=object).reshape((-1,) + slice_shape)
+    new_grid = np.moveaxis(
+        np.concatenate([grid, new_slices], axis=0), 0, dp_idx
+    )
+    new_mesh = jax.sharding.Mesh(new_grid, axis_names)
+    return new_mesh, new_slices.shape[0]
+
+
+class StepClock:
+    """Deterministic virtual clock: advances ``dt`` seconds per train step.
+
+    The chaos harness injects this into the elastic controller so failure
+    detection (heartbeat timeouts, straggler percentiles) is a pure
+    function of the event script — no wall-clock nondeterminism."""
+
+    def __init__(self, dt: float = 1.0, t0: float = 0.0):
+        self.dt = dt
+        self.t = t0
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self) -> float:
+        self.t += self.dt
+        return self.t
 
 
 @dataclasses.dataclass

@@ -1,0 +1,141 @@
+"""Elastic resize policies (``ELASTIC_POLICIES``, DESIGN.md S12).
+
+A policy turns the host-side health picture — heartbeat failures,
+straggler percentiles, pending joins — into one :class:`ResizeDecision`
+per step.  The :class:`repro.runtime.elastic.ElasticTrainer` executes the
+decision: ``shrink``/``grow`` rebuild the mesh and migrate state in place
+(no checkpoint round-trip when the survivors hold the data), ``abort``
+raises, ``none`` trains.
+
+Mirroring the collectives and asynchrony subsystems, policies live in a
+registry keyed by name; adding one is a single ``@register_policy`` class
+here (and nothing else — the trainer and the ``--elastic-policy`` CLI
+flag resolve by name).
+
+- ``static``: never resize; any confirmed failure aborts the run.  The
+  baseline (and what non-elastic launchers implicitly do).
+- ``shrink_on_failure``: drop the DP slices of failed workers and keep
+  training at the (possibly non-power-of-two) smaller extent — the
+  paper's modified recursive doubling makes every collective correct at
+  any p, which is what makes this cheap.
+- ``grow_on_join``: ``shrink_on_failure`` plus admission of pending
+  joiners: new workers are appended as DP slices and receive the params
+  via an MRD-plan broadcast at the new extent.
+- ``drain_straggler``: ``shrink_on_failure`` plus eviction of workers
+  whose step times exceed the heartbeat straggler rule — a slow-but-alive
+  worker is drained instead of throttling the whole DP group.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence
+
+from repro.runtime.fault_tolerance import FailureDetector
+
+
+@dataclasses.dataclass(frozen=True)
+class ResizeDecision:
+    """What the policy wants done before the next train step."""
+
+    action: str = "none"  # 'none' | 'shrink' | 'grow' | 'abort'
+    remove: frozenset = frozenset()  # device ids to drop (shrink/abort)
+    admit: tuple = ()  # device ids to add (grow)
+    reason: str = ""
+
+
+ELASTIC_POLICIES: Dict[str, "ElasticPolicy"] = {}
+
+
+def register_policy(name: str):
+    def deco(cls):
+        ELASTIC_POLICIES[name] = cls()
+        return cls
+
+    return deco
+
+
+def get_policy(name: str) -> "ElasticPolicy":
+    if isinstance(name, ElasticPolicy):
+        return name
+    try:
+        return ELASTIC_POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown elastic policy {name!r}; "
+            f"registered: {sorted(ELASTIC_POLICIES)}"
+        ) from None
+
+
+def available() -> list[str]:
+    return sorted(ELASTIC_POLICIES)
+
+
+class ElasticPolicy:
+    """Base: no failures tolerated, no growth."""
+
+    def decide(
+        self,
+        detector: FailureDetector,
+        now: float,
+        pending_joins: Sequence[int],
+        mesh_device_ids: frozenset,
+    ) -> ResizeDecision:
+        raise NotImplementedError
+
+    def _confirmed_failures(self, detector, now, mesh_device_ids):
+        return frozenset(w for w in detector.failed(now) if w in mesh_device_ids)
+
+
+@register_policy("static")
+class StaticPolicy(ElasticPolicy):
+    def decide(self, detector, now, pending_joins, mesh_device_ids):
+        failed = self._confirmed_failures(detector, now, mesh_device_ids)
+        if failed:
+            return ResizeDecision(
+                "abort", remove=failed,
+                reason=f"static policy: workers {sorted(failed)} failed",
+            )
+        return ResizeDecision()
+
+
+@register_policy("shrink_on_failure")
+class ShrinkOnFailurePolicy(ElasticPolicy):
+    def decide(self, detector, now, pending_joins, mesh_device_ids):
+        failed = self._confirmed_failures(detector, now, mesh_device_ids)
+        if failed:
+            return ResizeDecision(
+                "shrink", remove=failed,
+                reason=f"heartbeat failure: {sorted(failed)}",
+            )
+        return ResizeDecision()
+
+
+@register_policy("grow_on_join")
+class GrowOnJoinPolicy(ShrinkOnFailurePolicy):
+    def decide(self, detector, now, pending_joins, mesh_device_ids):
+        d = super().decide(detector, now, pending_joins, mesh_device_ids)
+        if d.action != "none":
+            return d
+        joiners = tuple(w for w in pending_joins if w not in mesh_device_ids)
+        if joiners:
+            return ResizeDecision(
+                "grow", admit=joiners, reason=f"join: {sorted(joiners)}"
+            )
+        return ResizeDecision()
+
+
+@register_policy("drain_straggler")
+class DrainStragglerPolicy(ShrinkOnFailurePolicy):
+    def decide(self, detector, now, pending_joins, mesh_device_ids):
+        d = super().decide(detector, now, pending_joins, mesh_device_ids)
+        if d.action != "none":
+            return d
+        slow = frozenset(
+            w for w in detector.stragglers() if w in mesh_device_ids
+        )
+        if slow:
+            return ResizeDecision(
+                "shrink", remove=slow, reason=f"straggler drain: {sorted(slow)}"
+            )
+        return ResizeDecision()
