@@ -1,0 +1,276 @@
+"""Continuous-batching serving sweep: scheduler x workload x arrival rate
+(``repro.serving``, DESIGN.md S13), against the static-batch baseline.
+
+The static baseline is the repo's historical serving shape: requests are
+processed in waves of ``slots``, every wave decodes until its *longest*
+request finishes, and finished requests idle their slot — the cost
+continuous batching exists to remove.  Both paths serve the same
+mixed-budget traffic and count the same *useful* tokens, so the
+``speedup_vs_static`` column is an apples-to-apples occupancy win.
+
+Rows (CSV on stdout: name,value,derived):
+
+- ``serve_llm_<sched>_<arrival>`` — ServeEngine throughput (tok/s), TTFT /
+  TPOT p50/p95 (ms), occupancy, speedup vs static.
+- ``serve_static_baseline`` — the wave baseline's tok/s.
+- ``serve_fixedpoint_<sched>`` — per-query D-iteration solves (requests/s)
+  vs the barrier baseline (every wave iterates until its slowest query
+  certifies — the global-barrier shape the paper's detection avoids).
+
+JSON: writes BENCH_serve.json ({"sweep": [...], "meta": {...}}).
+
+``--quick`` shrinks the grid for CI smoke; ``--check`` asserts the
+acceptance gate: continuous >= static token throughput at the highest
+arrival rate (all requests queued at t=0).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.distributed import step as step_lib
+from repro.launch.train import build_mesh
+from repro.models import transformer
+from repro.serving import Request, ServeConfig, ServeEngine, make_workload
+
+
+def _traffic(n_req, prompt_len, gen_max, vocab, seed):
+    """Mixed-budget traffic: uniform prompts, budgets in [gen_max/3, gen_max]."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, vocab, size=prompt_len) for _ in range(n_req)]
+    budgets = [int(b) for b in rng.integers(max(2, gen_max // 3), gen_max + 1,
+                                            size=n_req)]
+    return prompts, budgets
+
+
+def _arrivals(kind, n_req, seed):
+    """'burst' = everything queued at t=0 (peak load), else a Poisson rate
+    (same generator the serve CLI uses)."""
+    from repro.launch.serve import _arrival_ticks
+
+    spec = "none" if kind == "burst" else f"poisson:{kind}"
+    return _arrival_ticks(spec, n_req, seed)
+
+
+def run_static_llm(cfg, mesh, params, prompts, budgets, slots):
+    """Wave-of-``slots`` static batches; each wave decodes to its max budget."""
+    serve_step, _ = step_lib.make_serve_step(cfg, mesh)
+    prefill_step, _ = step_lib.make_cached_prefill_step(cfg, mesh)
+    jstep = jax.jit(serve_step, donate_argnums=(2,))
+    jprefill = jax.jit(prefill_step, donate_argnums=(2,))
+    P = prompts[0].shape[0]
+    gen_cap = max(budgets)
+    max_len = P + gen_cap + 1
+
+    def one_wave(wave_prompts, wave_budgets):
+        B = slots
+        batch = np.zeros((B, P), np.int64)
+        for i, p in enumerate(wave_prompts):
+            batch[i] = p
+        with mesh:
+            cache = transformer.init_cache(cfg, B, max_len)
+            logits, cache = jprefill(params, jnp.asarray(batch), cache)
+            toks = jnp.argmax(logits, -1).astype(jnp.int32)
+            for k in range(max(wave_budgets) - 1):
+                logits, cache = jstep(params, toks, cache, jnp.int32(P + k))
+                toks = jnp.argmax(logits, -1).astype(jnp.int32)
+            jax.block_until_ready(toks)
+
+    waves = [
+        (prompts[i : i + slots], budgets[i : i + slots])
+        for i in range(0, len(prompts), slots)
+    ]
+    one_wave(*waves[0])  # warm the compile cache outside the timed region
+    t0 = time.perf_counter()
+    for wp, wb in waves:
+        one_wave(wp, wb)
+    dt = time.perf_counter() - t0
+    useful = sum(budgets)
+    return {"tok_s": useful / dt, "wall_s": dt, "useful_tokens": useful}
+
+
+def run_continuous_llm(workload, prompts, budgets, arrivals, scheduler):
+    workload.reset()
+    eng = ServeEngine(workload, ServeConfig(
+        scheduler=scheduler, termination="eos_maxlen",
+    ))
+    reqs = [
+        Request(id=i, arrival=a, prompt=p, max_new=b)
+        for i, (p, b, a) in enumerate(zip(prompts, budgets, arrivals))
+    ]
+    eng.run(reqs)
+    return eng.summary()
+
+
+def run_fixedpoint(n, dp, slots, n_req, eps, scheduler, seed):
+    """Continuous residual-certified solves vs the barrier baseline."""
+    workload = make_workload(
+        "fixedpoint_solve", solver="d_iteration", n=n, dp=dp, slots=slots,
+        damping=0.8, seed=seed,
+    )
+    rng = np.random.default_rng(seed)
+    payloads = []
+    for _ in range(n_req):
+        v = rng.random(n).astype(np.float32)
+        payloads.append(v / v.sum())
+
+    # barrier baseline: waves of `slots` queries iterate until the *slowest*
+    # certifies (true-residual oracle, free of charge — generous baseline)
+    vmapped_map = jax.vmap(workload.pool.param_map)
+    pm = jax.jit(vmapped_map)
+    res_of = jax.jit(
+        lambda x, v: jnp.max(jnp.abs(vmapped_map(x, v) - x), axis=1)
+    )
+
+    def one_wave(vs):
+        V = jnp.asarray(np.stack(vs))
+        x = jnp.zeros_like(V)
+        iters = 0
+        while True:
+            x = pm(x, V)
+            iters += 1
+            if bool((np.asarray(res_of(x, V)) < eps).all()) or iters > 5000:
+                break
+        return iters
+
+    waves = [payloads[i : i + slots] for i in range(0, n_req, slots)]
+    one_wave(waves[0])
+    t0 = time.perf_counter()
+    total_iters = sum(one_wave(w) for w in waves)
+    dt_static = time.perf_counter() - t0
+
+    scfg = ServeConfig(
+        scheduler=scheduler, termination="residual_interval", dp=dp, eps=eps,
+    )
+    # warm the fused-loop compile cache outside the timed run
+    ServeEngine(workload, scfg).run(
+        [Request(id=-1 - i, payload=p, max_new=5000)
+         for i, p in enumerate(payloads[: slots + 1])]
+    )
+    workload.reset()
+    eng = ServeEngine(workload, scfg)
+    reqs = [Request(id=i, payload=p, max_new=5000)
+            for i, p in enumerate(payloads)]
+    eng.run(reqs)
+    s = eng.summary()
+    return {
+        "req_s": len(payloads) / s["wall_s"],
+        "static_req_s": len(payloads) / dt_static,
+        "ticks": s["ticks"],
+        "static_iters": total_iters,
+        "converged": s["converged"],
+        "occupancy": s["occupancy"],
+    }
+
+
+def main(json_path="BENCH_serve.json", quick=False, check=False):
+    arch = "llama3.2-1b"
+    slots = 2 if quick else 4
+    n_req = 6 if quick else 16
+    prompt_len = 6 if quick else 12
+    gen_max = 24 if quick else 48
+    schedulers = ("fcfs",) if quick else ("fcfs", "priority", "sla_edf")
+    arrival_kinds = ("burst",) if quick else ("0.25", "1.0", "burst")
+    seed = 0
+
+    cfg = registry.get_smoke_config(arch)
+    mesh = build_mesh(1, 1)
+    prompts, budgets = _traffic(n_req, prompt_len, gen_max, cfg.vocab, seed)
+    workload = make_workload(
+        "llm_decode", cfg=cfg, mesh=mesh, slots=slots,
+        max_len=prompt_len + gen_max + 2, max_prompt_len=prompt_len, seed=seed,
+    )
+
+    rows = []
+    static = run_static_llm(cfg, mesh, workload.params, prompts, budgets, slots)
+    rows.append({
+        "name": "serve_static_baseline", "workload": "llm_decode",
+        "tok_s": round(static["tok_s"], 1),
+        "useful_tokens": static["useful_tokens"],
+        "wall_s": round(static["wall_s"], 3),
+    })
+
+    # warm the continuous path's compile cache outside the timed runs too
+    # (slots+1 requests: the recycled-slot admission path compiles as well)
+    w = slots + 1
+    run_continuous_llm(workload, prompts[:w], budgets[:w], [0] * w, "fcfs")
+
+    burst_tok_s = None
+    for sched in schedulers:
+        for akind in arrival_kinds:
+            arrivals = _arrivals(akind, n_req, seed + 3)
+            s = run_continuous_llm(workload, prompts, budgets, arrivals, sched)
+            row = {
+                "name": f"serve_llm_{sched}_{akind}",
+                "workload": "llm_decode", "scheduler": sched,
+                "arrival": akind,
+                "tok_s": round(s["throughput_tok_s"], 1),
+                "ttft_p50_ms": round(s["ttft_p50_ms"], 2),
+                "ttft_p95_ms": round(s["ttft_p95_ms"], 2),
+                "tpot_p50_ms": round(s["tpot_p50_ms"], 3),
+                "tpot_p95_ms": round(s["tpot_p95_ms"], 3),
+                "occupancy": round(s["occupancy"], 3),
+                "speedup_vs_static": round(
+                    s["throughput_tok_s"] / static["tok_s"], 3),
+            }
+            rows.append(row)
+            if sched == "fcfs" and akind == "burst":
+                burst_tok_s = s["throughput_tok_s"]
+
+    fp = run_fixedpoint(
+        n=48 if quick else 66, dp=2 if quick else 3, slots=slots,
+        n_req=n_req, eps=1e-6, scheduler="fcfs", seed=seed,
+    )
+    rows.append({
+        "name": "serve_fixedpoint_fcfs", "workload": "fixedpoint_solve",
+        "scheduler": "fcfs",
+        "req_s": round(fp["req_s"], 2),
+        "static_req_s": round(fp["static_req_s"], 2),
+        "speedup_vs_static": round(fp["req_s"] / fp["static_req_s"], 3),
+        "occupancy": round(fp["occupancy"], 3),
+        "converged": fp["converged"],
+    })
+
+    for r in rows:
+        derived = r.get("speedup_vs_static", "")
+        print(f"{r['name']},{r.get('tok_s', r.get('req_s'))},{derived}")
+    payload = {
+        "meta": {"arch": arch, "slots": slots, "requests": n_req,
+                 "prompt_len": prompt_len, "gen_max": gen_max,
+                 "quick": quick, "baseline": "static waves"},
+        "sweep": rows,
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {json_path}")
+
+    if check:
+        assert burst_tok_s is not None
+        assert burst_tok_s >= static["tok_s"], (
+            f"continuous batching ({burst_tok_s:.1f} tok/s) lost to the "
+            f"static baseline ({static['tok_s']:.1f} tok/s) at peak arrival"
+        )
+        for r in rows:
+            if r["workload"] == "fixedpoint_solve":
+                assert r["converged"] == n_req, r
+        print(f"# sanity OK: continuous {burst_tok_s:.1f} tok/s >= "
+              f"static {static['tok_s']:.1f} tok/s; fixedpoint all certified")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_serve.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grid (CI smoke)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert continuous >= static throughput at peak "
+                         "arrival + fixedpoint certification (CI gate)")
+    args = ap.parse_args()
+    main(json_path=args.json, quick=args.quick, check=args.check)

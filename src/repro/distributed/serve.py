@@ -100,6 +100,144 @@ def make_cached_prefill_step(cfg: ModelConfig, mesh: Mesh):
     return prefill_step, rules
 
 
+# ---------------------------------------------------------------------------
+# Continuous-batching pool steps (repro.serving, DESIGN.md S13)
+# ---------------------------------------------------------------------------
+
+# Leaf-name -> batch-axis index for every cache family built by
+# ``transformer.init_cache`` (the slot dimension of a decode pool).
+_CACHE_BATCH_AXIS = {
+    "k": 1, "v": 1, "k_scale": 1, "v_scale": 1,          # dense/moe/vlm [L,B,...]
+    "global_k": 1, "global_v": 1,                        # gemma3 [G,B,...]
+    "local_k": 2, "local_v": 2,                          # gemma3 [G,P,B,...]
+    "h": 1, "conv": 1,                                   # ssm [L,B,...]
+    "m_h": 2, "m_conv": 2,                               # hybrid [G,k,B,...]
+    "attn_k": 1, "attn_v": 1,                            # hybrid [G,B,...]
+}
+
+
+def _leaf_name(path) -> str:
+    for e in reversed(path):
+        if isinstance(e, jax.tree_util.DictKey):
+            return str(e.key)
+    raise KeyError(f"no dict key in path {path}")
+
+
+def cache_batch_axes(cache: Any):
+    """Pytree matching ``cache`` whose leaves are the batch (slot) axis index."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, _: _CACHE_BATCH_AXIS[_leaf_name(p)], cache
+    )
+
+
+def select_slots(mask, cache_new: Any, cache_old: Any):
+    """Per-slot select between two caches: slot ``s`` takes ``cache_new``
+    where ``mask[s]``, else ``cache_old`` (leaves keep their layout)."""
+
+    def sel(path, new, old):
+        ax = _CACHE_BATCH_AXIS[_leaf_name(path)]
+        shape = [1] * new.ndim
+        shape[ax] = mask.shape[0]
+        return jnp.where(mask.reshape(shape), new, old)
+
+    return jax.tree_util.tree_map_with_path(sel, cache_new, cache_old)
+
+
+def _expand_slot(cache: Any):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: jnp.expand_dims(l, _CACHE_BATCH_AXIS[_leaf_name(p)]), cache
+    )
+
+
+def _squeeze_slot(cache: Any):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: jnp.squeeze(l, _CACHE_BATCH_AXIS[_leaf_name(p)]), cache
+    )
+
+
+def make_pool_decode_step(cfg: ModelConfig, mesh: Mesh):
+    """Decode step with a *per-slot* cache length (continuous batching).
+
+    ``pool_step(params, tokens [S], cache, lengths [S]) -> (logits [S,V],
+    cache)`` — a ``vmap`` of the single-sequence decode step over the slot
+    dimension, so every slot advances at its own position/write offset.
+    Slot math is independent (vmap adds no cross-slot terms), which is what
+    makes continuous batching bit-equal to solo decode per request.
+    """
+    rules = shd.make_rules(cfg, mesh, fsdp=_serve_needs_fsdp(cfg, mesh))
+
+    def pool_step(params, tokens, cache, lengths):
+        axes = cache_batch_axes(cache)
+
+        def one(tok, cslot, length):
+            logits, c2 = transformer.forward_decode(
+                params, tok[None], _expand_slot(cslot), length, cfg
+            )
+            return logits[0], _squeeze_slot(c2)
+
+        with shd.sharding_ctx(cfg, rules):
+            return jax.vmap(one, in_axes=(0, axes, 0), out_axes=(0, axes))(
+                tokens, cache, lengths
+            )
+
+    return pool_step, rules
+
+
+def make_slot_prefill_step(cfg: ModelConfig, mesh: Mesh, max_prompt_len: int):
+    """Offset-prefill into a live cache slot (slot recycling).
+
+    ``slot_prefill(params, prompt [Lmax], plen, cache, slot) ->
+    (last_logits [V], cache)``: the retired slot's cache slice is zeroed
+    (recurrent SSM/conv state must not leak between requests; attention
+    positions beyond the new length are masked anyway) and the decode step
+    is scanned over the padded prompt, masking positions ``>= plen`` — one
+    jitted dispatch per admission, shapes fixed by ``max_prompt_len``, so
+    admission never recompiles.  The rest of the pool is untouched, so live
+    slots keep decoding across admissions.
+    """
+    rules = shd.make_rules(cfg, mesh, fsdp=_serve_needs_fsdp(cfg, mesh))
+
+    def slot_prefill(params, prompt, plen, cache, slot):
+        axes = cache_batch_axes(cache)
+        cslot = jax.tree_util.tree_map_with_path(
+            lambda p, l: jnp.zeros_like(
+                jax.lax.dynamic_index_in_dim(
+                    l, slot, axis=_CACHE_BATCH_AXIS[_leaf_name(p)], keepdims=True
+                )
+            ),
+            cache,
+        )
+
+        def body(carry, xs):
+            c, last = carry
+            tok, i = xs
+            with shd.sharding_ctx(cfg, rules):
+                logits, c2 = transformer.forward_decode(
+                    params, tok[None], c, i, cfg
+                )
+            live = i < plen
+            c = jax.tree.map(lambda a, b: jnp.where(live, a, b), c2, c)
+            last = jnp.where(i == plen - 1, logits[0], last)
+            return (c, last), None
+
+        (cslot, last_logits), _ = jax.lax.scan(
+            body,
+            (cslot, jnp.zeros((cfg.vocab,), jnp.float32)),
+            (prompt[:max_prompt_len], jnp.arange(max_prompt_len, dtype=jnp.int32)),
+            unroll=1,
+        )
+        cache = jax.tree_util.tree_map_with_path(
+            lambda p, l, s: jax.lax.dynamic_update_index_in_dim(
+                l, jnp.squeeze(s, _CACHE_BATCH_AXIS[_leaf_name(p)]), slot,
+                axis=_CACHE_BATCH_AXIS[_leaf_name(p)],
+            ),
+            cache, cslot,
+        )
+        return last_logits, cache
+
+    return slot_prefill, rules
+
+
 def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
     """Prefill: full forward, returns last-position logits [B, V]."""
     rules = shd.make_rules(cfg, mesh, fsdp=_serve_needs_fsdp(cfg, mesh))

@@ -1,13 +1,28 @@
-"""Serving driver: batched greedy decoding with a KV/state cache.
+"""Serving driver: static batch or continuous batching (``--continuous``).
 
-Usage (CPU demo):
+Static (the historical path, now with honest timing — ``block_until_ready``
+fences around the timed regions, prefill and decode reported separately):
+
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \\
       --batch 4 --prompt-len 16 --gen 32
+
+Continuous batching via the ``repro.serving`` subsystem (DESIGN.md S13):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \\
+      --continuous --slots 4 --requests 16 --arrival poisson:0.5 \\
+      --scheduler fcfs --gen 24
+
+  # per-query fixed-point solves (D-iteration / personalized PageRank),
+  # retired by the paper's detection protocol, agreement across --dp replicas
+  PYTHONPATH=src python -m repro.launch.serve --continuous \\
+      --workload fixedpoint_solve --termination residual_interval \\
+      --requests 8 --dp 3 --gen 400
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -18,26 +33,38 @@ from repro.configs import registry
 from repro.distributed import step as step_lib
 from repro.launch.train import build_mesh
 from repro.models import transformer
+from repro.serving import (
+    SCHEDULERS,
+    TERMINATION,
+    WORKLOADS,
+    Request,
+    ServeConfig,
+    ServeEngine,
+    make_workload,
+)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=registry.list_archs())
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--dp", type=int, default=1)
-    ap.add_argument("--tp", type=int, default=1)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+def _arrival_ticks(spec: str, n: int, seed: int) -> list[int]:
+    """``none`` (all at t=0) | ``poisson:RATE`` (requests/tick) | ``trace:FILE``
+    (JSON list of arrival ticks)."""
+    if spec == "none":
+        return [0] * n
+    kind, _, arg = spec.partition(":")
+    if kind == "poisson":
+        rate = float(arg)
+        rng = np.random.default_rng(seed)
+        gaps = rng.exponential(1.0 / max(rate, 1e-9), size=n)
+        return np.floor(np.cumsum(gaps)).astype(int).tolist()
+    if kind == "trace":
+        with open(arg) as f:
+            ticks = json.load(f)
+        if len(ticks) < n:
+            raise SystemExit(f"trace {arg} has {len(ticks)} arrivals, need {n}")
+        return [int(t) for t in ticks[:n]]
+    raise SystemExit(f"unknown --arrival {spec!r} (none | poisson:R | trace:FILE)")
 
-    cfg = (
-        registry.get_smoke_config(args.arch) if args.smoke else registry.get_config(args.arch)
-    )
-    if cfg.is_encoder_only:
-        raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
-    mesh = build_mesh(args.dp, args.tp)
+
+def _static_main(args, cfg, mesh):
     serve_step, rules = step_lib.make_serve_step(cfg, mesh)
     prefill_step, _ = step_lib.make_cached_prefill_step(cfg, mesh)
 
@@ -51,20 +78,144 @@ def main(argv=None):
         jstep = jax.jit(serve_step, donate_argnums=(2,))
         jprefill = jax.jit(prefill_step, donate_argnums=(2,))
 
-        # single-dispatch prefill (scanned decode steps), then generate
-        t0 = time.time()
+        # fence before timing so we measure execution, not dispatch of the
+        # param/cache initialization still in flight
+        jax.block_until_ready((params, cache, prompt))
+
+        # --- prefill phase (single scanned dispatch) ---
+        t0 = time.perf_counter()
         logits, cache = jprefill(params, prompt, cache)
+        jax.block_until_ready((logits, cache))
+        dt_prefill = time.perf_counter() - t0
+
+        # --- decode phase ---
         out = []
         toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        jax.block_until_ready(toks)
+        t0 = time.perf_counter()
         for i in range(args.gen):
             out.append(np.asarray(toks))
             logits, cache = jstep(params, toks, cache, jnp.int32(args.prompt_len + i))
             toks = jnp.argmax(logits, -1).astype(jnp.int32)
-        dt = time.time() - t0
-        total = args.batch * (args.prompt_len + args.gen)
-        print(f"decoded {args.gen} tokens x {args.batch} seqs "
-              f"({total / dt:.1f} tok/s total on CPU demo)")
+        jax.block_until_ready(toks)
+        dt_decode = time.perf_counter() - t0
+
+        pre_tok = args.batch * args.prompt_len
+        dec_tok = args.batch * args.gen
+        print(f"prefill: {pre_tok} tokens in {dt_prefill * 1e3:.1f} ms "
+              f"({pre_tok / dt_prefill:.1f} tok/s)")
+        print(f"decode:  {dec_tok} tokens in {dt_decode * 1e3:.1f} ms "
+              f"({dec_tok / dt_decode:.1f} tok/s, "
+              f"{dt_decode / args.gen * 1e3:.2f} ms/step)")
         print("sample token ids:", np.stack(out, 1)[0][:16].tolist())
+
+
+def _continuous_main(args, cfg, mesh):
+    rng = np.random.default_rng(args.seed)
+    arrivals = _arrival_ticks(args.arrival, args.requests, args.seed + 7)
+
+    if args.workload == "llm_decode":
+        max_len = args.max_len or (args.prompt_len + args.gen + 4)
+        wl = make_workload(
+            "llm_decode", cfg=cfg, mesh=mesh, slots=args.slots,
+            max_len=max_len, max_prompt_len=args.prompt_len, seed=args.seed,
+        )
+        termination = args.termination or "eos_maxlen"
+        reqs = [
+            Request(
+                id=i, arrival=arrivals[i],
+                prompt=rng.integers(0, cfg.vocab, size=int(rng.integers(1, args.prompt_len + 1))),
+                max_new=int(rng.integers(max(1, args.gen // 2), args.gen + 1)),
+                priority=int(rng.integers(0, 3)),
+                sla=int(rng.integers(4, 64)),
+            )
+            for i in range(args.requests)
+        ]
+    else:
+        n = ((args.n + args.dp - 1) // args.dp) * args.dp  # dp-block divisible
+        if n != args.n:
+            print(f"# rounding --n {args.n} up to {n} (divisible by dp={args.dp})")
+        args.n = n
+        wl = make_workload(
+            "fixedpoint_solve", solver=args.solver, n=args.n,
+            slots=args.slots, dp=args.dp,
+        )
+        termination = args.termination or "residual_interval"
+        reqs = []
+        for i in range(args.requests):
+            v = rng.random(args.n).astype(np.float32)
+            reqs.append(Request(
+                id=i, arrival=arrivals[i], payload=v / v.sum(),
+                max_new=args.gen, priority=int(rng.integers(0, 3)),
+                sla=int(rng.integers(50, 500)),
+            ))
+
+    eng = ServeEngine(wl, ServeConfig(
+        scheduler=args.scheduler, termination=termination,
+        dp=args.dp, eps=args.eps,
+    ))
+    res = eng.run(reqs)
+    s = eng.summary()
+    print(f"{args.workload} x {args.scheduler} x {termination} (dp={args.dp}): "
+          f"{s['completed']} requests in {s['ticks']} ticks / {s['wall_s']:.2f} s")
+    print(f"  throughput {s['throughput_tok_s']:.1f} tok/s | occupancy "
+          f"{s['occupancy']:.2f} | converged {s['converged']}/{s['completed']}")
+    print(f"  TTFT p50/p95 {s['ttft_p50_ms']:.1f}/{s['ttft_p95_ms']:.1f} ms | "
+          f"TPOT p50/p95 {s['tpot_p50_ms']:.2f}/{s['tpot_p95_ms']:.2f} ms")
+    first = res[min(res)]
+    tail = (first.output[:8].tolist() if first.output.dtype.kind == "i"
+            else np.round(first.output[:4], 5).tolist())
+    print(f"  request {first.id}: {first.n_tokens} tokens, "
+          f"admit@{first.admit_tick} retire@{first.retire_tick}, head {tail}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.list_archs(),
+                    help="model arch (required unless --workload fixedpoint_solve)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4, help="static batch size")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--dp", type=int, default=1)
+    ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    # continuous batching (repro.serving)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the continuous-batching ServeEngine")
+    ap.add_argument("--slots", type=int, default=4, help="decode pool slots")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--scheduler", default="fcfs", choices=sorted(SCHEDULERS))
+    ap.add_argument("--workload", default="llm_decode", choices=sorted(WORKLOADS))
+    ap.add_argument("--termination", default=None, choices=sorted(TERMINATION),
+                    help="default: eos_maxlen (llm) / residual_interval (fixedpoint)")
+    ap.add_argument("--arrival", default="none",
+                    help="none | poisson:RATE (req/tick) | trace:FILE (JSON ticks)")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="pool cache length (0 = prompt+gen+margin)")
+    ap.add_argument("--solver", default="d_iteration",
+                    help="fixedpoint_solve: SOLVERS entry (affine payload)")
+    ap.add_argument("--n", type=int, default=64, help="fixedpoint problem size")
+    ap.add_argument("--eps", type=float, default=1e-6)
+    args = ap.parse_args(argv)
+
+    needs_model = not (args.continuous and args.workload == "fixedpoint_solve")
+    cfg = None
+    if needs_model:
+        if not args.arch:
+            raise SystemExit("--arch is required for LLM serving")
+        cfg = (
+            registry.get_smoke_config(args.arch) if args.smoke
+            else registry.get_config(args.arch)
+        )
+        if cfg.is_encoder_only:
+            raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
+    mesh = build_mesh(args.dp, args.tp) if needs_model else None
+
+    if args.continuous:
+        _continuous_main(args, cfg, mesh)
+    else:
+        _static_main(args, cfg, mesh)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,47 @@
+"""Registry-backed continuous-batching serving subsystem (DESIGN.md S13).
+
+Mirrors the collectives/asynchrony/runtime architecture: layered
+registries, one engine composing them —
+
+| layer | module | registry |
+|---|---|---|
+| decode pools | ``serving/pool.py`` | (pool classes; jitted slot steps) |
+| schedulers | ``serving/schedulers.py`` | ``SCHEDULERS`` |
+| termination | ``serving/termination.py`` | ``TERMINATION`` |
+| workloads | ``serving/workloads.py`` | ``WORKLOADS`` |
+| engine | ``serving/engine.py`` | composes the four |
+
+The load-bearing idea: deciding *when each in-flight request is done*
+without a global barrier is the paper's distributed convergence-detection
+problem, so per-request termination runs the same non-blocking MRD
+reduction machinery (``repro.collectives.plans`` +
+``repro.asynchrony.DETECTION_PROTOCOLS``) as the solver engine and the
+training-loop monitor — at ``dp > 1`` all replicas retire the same slots
+on the same tick because retirement is a pure function of the *agreed*
+reduction, at any (non-power-of-two) replica count.
+"""
+
+from repro.serving.engine import (  # noqa: F401
+    Request,
+    RequestResult,
+    ServeConfig,
+    ServeEngine,
+)
+from repro.serving.pool import DecodePool, FixedPointPool  # noqa: F401
+from repro.serving.schedulers import (  # noqa: F401
+    SCHEDULERS,
+    get_scheduler,
+    register_scheduler,
+)
+from repro.serving.termination import (  # noqa: F401
+    TERMINATION,
+    TerminationConfig,
+    get_termination,
+    register_termination,
+)
+from repro.serving.workloads import (  # noqa: F401
+    WORKLOADS,
+    get_workload,
+    make_workload,
+    register_workload,
+)

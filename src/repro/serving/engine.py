@@ -1,0 +1,418 @@
+"""Layer 5 of the serving subsystem: the *engine* — a thin composition of
+workload x scheduler x termination (mirroring ``repro.asynchrony.engine``).
+
+Per engine tick:
+
+1. **admit** — the scheduler maps (pending queue, free slots) to
+   admissions; each admission is one jitted offset-prefill into a recycled
+   slot (shapes fixed, never recompiles) and produces the request's first
+   token (TTFT stops here);
+2. **step** — one jitted pool step advances every active slot at its own
+   cache offset;
+3. **terminate/retire** — the termination protocol advances its staged MRD
+   reduction one stage (the paper's non-blocking detection loop as serving
+   control plane); slots certified done by the *agreed* result retire, are
+   freed, and their outputs collected.
+
+Metrics: TTFT / TPOT (wall seconds, p50/p95 in :meth:`ServeEngine.summary`),
+token throughput, slot occupancy, plus deterministic tick-domain latencies
+(queue wait, admission tick, retirement tick) for the bit-level tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.asynchrony.protocols import RES_INIT
+from repro.serving.schedulers import get_scheduler
+from repro.serving.termination import (
+    TerminationConfig,
+    get_termination,
+    make_signals,
+)
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request (either a token prompt or a solver payload)."""
+
+    id: int
+    arrival: int = 0  # tick at which the request enters the queue
+    prompt: Any = None  # llm_decode: 1-D int token array
+    payload: Any = None  # fixedpoint_solve: affine payload [n] (None = default)
+    max_new: int = 32  # generation budget / iteration budget
+    eos: int = -1  # llm_decode: EOS token id (-1 = never)
+    priority: int = 0  # 'priority' scheduler: higher first
+    sla: Optional[int] = None  # 'sla_edf' scheduler: deadline = arrival + sla
+    eps: Optional[float] = None  # residual protocols: per-request threshold
+
+
+@dataclasses.dataclass
+class RequestResult:
+    id: int
+    output: np.ndarray  # token ids (trimmed) or solution vector
+    arrival: int
+    admit_tick: int
+    retire_tick: int
+    n_tokens: int
+    certified: float  # agreed value at retirement (residual / done bit)
+    converged: bool  # False only for budget-forced fixed-point retirement
+    ttft_s: float
+    tpot_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    scheduler: str = "fcfs"
+    termination: str = "eos_maxlen"
+    dp: int = 1  # termination-agreement replicas (MRD over [dp])
+    eps: float = 1e-6
+    window: int = 0  # residual_interval: 0 -> one agreement cycle + 1
+    max_admit_per_tick: int = 0  # 0 = fill every free slot
+    max_ticks: int = 100_000
+    # ticks per fused dispatch: the device loop early-exits on the first
+    # retiring tick (so retirement -> admission latency is one dispatch)
+    # and the host caps it at the next pending arrival, so larger values
+    # only amortize host overhead — they never delay scheduling decisions
+    steps_per_dispatch: int = 16
+
+
+class ServeEngine:
+    """Continuous-batching serving loop over a workload's pool."""
+
+    def __init__(self, workload, cfg: ServeConfig = ServeConfig()):
+        if cfg.termination.startswith("residual") and not workload.residual_capable:
+            raise ValueError(
+                f"termination {cfg.termination!r} needs a residual-reporting "
+                f"workload (got {type(workload).__name__}); use 'eos_maxlen'"
+            )
+        self.workload = workload
+        self.cfg = cfg
+        self.slots = workload.slots
+        self.scheduler = get_scheduler(cfg.scheduler)
+        self.term = get_termination(cfg.termination)
+        self.tcfg = TerminationConfig(
+            dp=cfg.dp, eps=cfg.eps, window=cfg.window
+        )
+        self.tstate = self.term.init(self.tcfg, self.slots)
+
+        # One jitted dispatch per tick: pool step + signal assembly +
+        # termination tick + budget force-retire + slot deactivation, all
+        # fused — the engine's host loop only syncs the tiny retire/token
+        # vectors, which is what keeps continuous batching ahead of the
+        # static baseline at small per-step costs.
+        certifying = cfg.termination.startswith("residual")
+        dp, slots = cfg.dp, self.slots
+        term, tcfg = self.term, self.tcfg
+
+        def _fused(params, wstate, tstate, ctrl, tick):
+            wstate, tokens, residual = workload.device_step(
+                params, wstate, ctrl["active"], tick
+            )
+            new_tokens = jnp.where(
+                ctrl["active"], ctrl["new_tokens"] + 1, ctrl["new_tokens"]
+            )
+            if residual is None:
+                residual = jnp.zeros((dp, slots), jnp.float32)
+            sig = make_signals(
+                tokens=tokens, new_tokens=new_tokens, eos=ctrl["eos"],
+                max_new=ctrl["max_new"], eps=ctrl["eps"],
+                active=ctrl["active"], admit_tick=ctrl["admit_tick"],
+                tick=tick, residual=residual,
+            )
+            tstate, retire = term.tick(tstate, sig, tcfg)
+            if certifying:
+                # iteration budget exhausted before the protocol certified
+                forced = ctrl["active"] & (new_tokens >= ctrl["max_new"]) & ~retire
+            else:
+                forced = jnp.zeros_like(retire)
+            ctrl = {
+                **ctrl,
+                "active": ctrl["active"] & ~(retire | forced),
+                "new_tokens": new_tokens,
+            }
+            return wstate, tstate, ctrl, retire, forced, tokens
+
+        K = cfg.steps_per_dispatch
+
+        def _fused_loop(params, wstate, tstate, ctrl, tick0, klim):
+            """Up to ``klim <= K`` fused ticks in one dispatch, early-exiting
+            after the first tick that retires a slot (the host then collects
+            outputs and admits from the queue)."""
+
+            def cond(c):
+                return (c["i"] < klim) & ~c["stop"] & jnp.any(c["ctrl"]["active"])
+
+            def body(c):
+                i = c["i"]
+                wstate, tstate, ctrl, retire, forced, tokens = _fused(
+                    params, c["wstate"], c["tstate"], c["ctrl"], tick0 + i
+                )
+                return {
+                    "wstate": wstate, "tstate": tstate, "ctrl": ctrl,
+                    "i": i + 1,
+                    "stop": jnp.any(retire | forced),
+                    "active_buf": c["active_buf"].at[i].set(c["ctrl"]["active"]),
+                    "tokens_buf": c["tokens_buf"].at[i].set(tokens),
+                    "retire_buf": c["retire_buf"].at[i].set(retire),
+                    "forced_buf": c["forced_buf"].at[i].set(forced),
+                }
+
+            init = {
+                "wstate": wstate, "tstate": tstate, "ctrl": ctrl,
+                "i": jnp.zeros((), jnp.int32),
+                "stop": jnp.zeros((), jnp.bool_),
+                "active_buf": jnp.zeros((K, slots), jnp.bool_),
+                "tokens_buf": jnp.zeros((K, slots), jnp.int32),
+                "retire_buf": jnp.zeros((K, slots), jnp.bool_),
+                "forced_buf": jnp.zeros((K, slots), jnp.bool_),
+            }
+            return jax.lax.while_loop(cond, body, init)
+
+        # compile once per (workload, termination config): engines over the
+        # same workload (bench re-runs, resets) reuse the compiled tick
+        cache = getattr(workload, "_fused_cache", None)
+        if cache is None:
+            cache = workload._fused_cache = {}
+        key = (cfg.termination, self.tcfg, K)
+        if key not in cache:
+            cache[key] = jax.jit(_fused_loop)
+        self._jfused = cache[key]
+        self.tstate = self._commit(self.tstate)
+        self._ctrl = None  # device control block (pushed when host-dirty)
+        self._ctrl_dirty = True
+
+        self.tick = 0
+        self.queue: List[Request] = []
+        self.pending: List[Request] = []  # submitted, not yet arrived
+        self.slot_req: List[Optional[Request]] = [None] * self.slots
+        self.results: Dict[int, RequestResult] = {}
+        # per-slot host mirrors of the device control block
+        self._active = np.zeros((self.slots,), bool)
+        self._admit_tick = np.zeros((self.slots,), np.int32)
+        self._new_tokens = np.zeros((self.slots,), np.int32)
+        self._max_new = np.ones((self.slots,), np.int32)
+        self._eos = np.full((self.slots,), -1, np.int32)
+        self._eps = np.full((self.slots,), cfg.eps, np.float32)
+        self._t_queue = np.zeros((self.slots,), np.float64)
+        self._t_first = np.zeros((self.slots,), np.float64)
+        # metrics accumulators
+        self._occupancy_ticks = 0
+        self._occupancy_sum = 0.0
+        self._t_start: Optional[float] = None
+        self._t_last = 0.0
+
+    # -- request intake -----------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Queue ``req`` (it becomes schedulable at ``req.arrival``)."""
+        if req.arrival <= self.tick:
+            req.arrival = self.tick
+            req._t_submit = time.perf_counter()
+            self.queue.append(req)
+        else:
+            self.pending.append(req)
+
+    @property
+    def active(self) -> np.ndarray:
+        return self._active
+
+    def _free_slots(self) -> List[int]:
+        return [s for s in range(self.slots) if self.slot_req[s] is None]
+
+    def _commit(self, tree):
+        """Pin replicated control/termination state to the workload's mesh.
+
+        Host-pushed (uncommitted) arrays and jit outputs (committed) hash to
+        different jit cache entries; committing both sides keeps the fused
+        tick at exactly one compilation."""
+        mesh = getattr(self.workload, "mesh", None)
+        if mesh is None:
+            return tree
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        sh = NamedSharding(mesh, PartitionSpec())
+        return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+    # -- one tick -----------------------------------------------------------
+
+    def step(self) -> np.ndarray:
+        """Advance one tick; returns the retired-slot mask ``[S]``."""
+        if self._t_start is None:
+            self._t_start = time.perf_counter()
+        now = self.tick
+        # release arrivals into the schedulable queue (TTFT clock starts
+        # when a request becomes visible, not when the caller built it)
+        still = []
+        for r in self.pending:
+            if r.arrival <= now:
+                r._t_submit = time.perf_counter()
+                self.queue.append(r)
+            else:
+                still.append(r)
+        self.pending = still
+
+        # 1. admit
+        free = self._free_slots()
+        if self.cfg.max_admit_per_tick:
+            free = free[: self.cfg.max_admit_per_tick]
+        for req, slot in self.scheduler.select(self.queue, free, now):
+            self.queue.remove(req)
+            t0 = time.perf_counter()
+            self.workload.admit(req, slot, now)
+            self.slot_req[slot] = req
+            self._active[slot] = True
+            self._admit_tick[slot] = now
+            # llm: the prefill's argmax token; fixedpoint: no iteration yet
+            self._new_tokens[slot] = self.workload.prefill_tokens
+            self._max_new[slot] = self.workload.clamp_max_new(req)
+            self._eos[slot] = req.eos
+            self._eps[slot] = self.cfg.eps if req.eps is None else req.eps
+            self._t_queue[slot] = getattr(req, "_t_submit", t0)
+            self._t_first[slot] = time.perf_counter()
+            self._ctrl_dirty = True
+
+        if not self._active.any():
+            # nothing in flight: fast-forward the virtual clock to the next
+            # arrival instead of burning empty device ticks
+            self.tick = (
+                min(r.arrival for r in self.pending)
+                if self.pending else now + 1
+            )
+            self._t_last = time.perf_counter()
+            return np.zeros((self.slots,), bool)
+
+        if self._ctrl_dirty:
+            ctrl = {
+                "active": jnp.asarray(self._active),
+                "new_tokens": jnp.asarray(self._new_tokens),
+                "admit_tick": jnp.asarray(self._admit_tick),
+                "eos": jnp.asarray(self._eos),
+                "max_new": jnp.asarray(self._max_new),
+                "eps": jnp.asarray(self._eps),
+            }
+            self._ctrl = self._commit(ctrl)
+            self._ctrl_dirty = False
+
+        # 2-3. pool steps + termination ticks, one fused dispatch running up
+        # to `klim` ticks (early exit on the first retiring tick); capped at
+        # the next pending arrival so scheduling never waits on the device
+        klim = self.cfg.steps_per_dispatch
+        if self.pending:
+            nxt = min(r.arrival for r in self.pending)
+            klim = max(1, min(klim, nxt - now))
+        if self.cfg.max_admit_per_tick and self.queue and self._free_slots():
+            klim = 1  # rate-limited admissions resume next tick
+        final = self._jfused(
+            self.workload.params, self.workload.wstate, self.tstate,
+            self._ctrl, jnp.int32(now), jnp.int32(klim),
+        )
+        self.workload.wstate = final["wstate"]
+        self.tstate = final["tstate"]
+        self._ctrl = final["ctrl"]
+        n_ticks = int(final["i"])
+        # convert whole buffers, slice on host: device-side slicing at a
+        # data-dependent length would compile one kernel per distinct length
+        active_buf = np.asarray(final["active_buf"])[:n_ticks]
+        tokens_buf = np.asarray(final["tokens_buf"])[:n_ticks]
+
+        for k in range(n_ticks):
+            act = active_buf[k]
+            self._new_tokens[act] += 1
+            self.workload.collect_tick(tokens_buf[k], act)
+            self._occupancy_sum += float(act.sum()) / self.slots
+            self._occupancy_ticks += 1
+
+        # 4. retire: by construction only the last executed tick can retire
+        # (the device loop exits right after it)
+        last = n_ticks - 1
+        retire = np.asarray(final["retire_buf"])[last]
+        forced = np.asarray(final["forced_buf"])[last]
+        out_mask = retire | forced
+        if out_mask.any():
+            self._active[out_mask] = False
+            certified = np.asarray(self.tstate["certified"])
+            t_done = time.perf_counter()
+            for slot in np.nonzero(out_mask)[0]:
+                self._collect(int(slot), now + last, certified,
+                              bool(forced[slot]), t_done)
+        self.tick = now + n_ticks
+        self._t_last = time.perf_counter()
+        return out_mask
+
+    def _collect(self, slot, now, certified, was_forced, t_done):
+        req = self.slot_req[slot]
+        out = self.workload.output(slot)
+        n_tok = int(self._new_tokens[slot])
+        if req.prompt is not None:  # llm: trim to EOS / budget
+            toks = out[: min(n_tok, int(self._max_new[slot]))]
+            hits = np.nonzero(toks == req.eos)[0]
+            if req.eos >= 0 and hits.size:
+                toks = toks[: hits[0] + 1]
+            out = toks
+            n_tok = int(out.shape[0])
+        ttft = self._t_first[slot] - self._t_queue[slot]
+        tpot = (t_done - self._t_first[slot]) / max(1, n_tok - 1)
+        # the protocol's per-slot certified latch is only written on
+        # protocol retirement; a budget-forced request must not inherit the
+        # value its slot's *previous* occupant certified at
+        cert = RES_INIT if was_forced else float(certified[slot])
+        self.results[req.id] = RequestResult(
+            id=req.id, output=out, arrival=req.arrival,
+            admit_tick=int(self._admit_tick[slot]), retire_tick=now,
+            n_tokens=n_tok, certified=cert,
+            converged=not was_forced, ttft_s=ttft, tpot_s=tpot,
+        )
+        self.slot_req[slot] = None
+
+    # -- drive to completion ------------------------------------------------
+
+    def run(self, requests=None, *, max_ticks: Optional[int] = None):
+        """Submit ``requests`` (scheduled by their ``arrival`` ticks) and
+        step until everything submitted has retired.  Returns ``results``."""
+        for r in requests or []:
+            self.submit(r)
+        budget = max_ticks or self.cfg.max_ticks
+        steps = 0
+        while self.queue or self.pending or any(self.slot_req):
+            if steps >= budget:
+                raise RuntimeError(
+                    f"serve loop did not drain within {budget} engine steps "
+                    f"({len(self.queue) + len(self.pending)} queued, "
+                    f"{sum(r is not None for r in self.slot_req)} in flight)"
+                )
+            self.step()
+            steps += 1
+        return self.results
+
+    # -- metrics ------------------------------------------------------------
+
+    def summary(self) -> Dict[str, Any]:
+        res = list(self.results.values())
+        wall = (self._t_last - self._t_start) if self._t_start else 0.0
+        ttft = np.asarray([r.ttft_s for r in res]) if res else np.zeros(1)
+        tpot = np.asarray([r.tpot_s for r in res]) if res else np.zeros(1)
+        return {
+            "completed": len(res),
+            "ticks": self.tick,
+            "wall_s": wall,
+            "tokens_out": int(sum(r.n_tokens for r in res)),
+            "throughput_tok_s": (
+                sum(r.n_tokens for r in res) / wall if wall > 0 else 0.0
+            ),
+            "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
+            "ttft_p95_ms": float(np.percentile(ttft, 95) * 1e3),
+            "tpot_p50_ms": float(np.percentile(tpot, 50) * 1e3),
+            "tpot_p95_ms": float(np.percentile(tpot, 95) * 1e3),
+            "occupancy": (
+                self._occupancy_sum / self._occupancy_ticks
+                if self._occupancy_ticks else 0.0
+            ),
+            "converged": int(sum(r.converged for r in res)),
+        }

@@ -1,0 +1,89 @@
+"""Layer 2 of the serving subsystem: admission *schedulers* (``SCHEDULERS``).
+
+A scheduler is pure host-side control plane: given the pending-request
+queue and the pool's free slots at a tick, it returns the admissions to
+perform this tick.  It never touches device state — admission itself is
+the workload's (jitted) offset-prefill — so schedulers are plain Python
+and trivially pluggable, mirroring the registry layering of
+``repro.collectives`` / ``repro.asynchrony``.
+
+Registered schedulers:
+
+- ``fcfs`` — first come, first served (arrival order; ties by id).
+- ``priority`` — highest ``Request.priority`` first (ties FCFS), the
+  classic two-class serving split (interactive vs batch).
+- ``sla_edf`` — earliest deadline first over ``Request.arrival +
+  Request.sla`` (requests without an SLA sort last, FCFS among
+  themselves); the canonical latency-target policy.
+
+All three admit at most ``len(free_slots)`` requests and assign the
+lowest-numbered free slots first, so scheduling decisions are
+deterministic given the queue — what the bit-equivalence tests rely on.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+SCHEDULERS: Dict[str, Any] = {}
+
+
+def register_scheduler(name: str):
+    def deco(cls):
+        SCHEDULERS[name] = cls()
+        return cls
+
+    return deco
+
+
+def get_scheduler(name: str):
+    try:
+        return SCHEDULERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {name!r}; registered: {sorted(SCHEDULERS)}"
+        ) from None
+
+
+class _SchedulerBase:
+    """Order the queue, then zip with the free slots."""
+
+    def order(self, queue: Sequence, now: int) -> List:
+        raise NotImplementedError
+
+    def select(
+        self, queue: Sequence, free_slots: Sequence[int], now: int
+    ) -> List[Tuple[Any, int]]:
+        """-> [(request, slot)] admissions for this tick (subset of queue)."""
+        if not queue or not free_slots:
+            return []
+        ordered = self.order(list(queue), now)
+        slots = sorted(free_slots)
+        return list(zip(ordered[: len(slots)], slots))
+
+
+@register_scheduler("fcfs")
+class FCFSScheduler(_SchedulerBase):
+    name = "fcfs"
+
+    def order(self, queue, now):
+        return sorted(queue, key=lambda r: (r.arrival, r.id))
+
+
+@register_scheduler("priority")
+class PriorityScheduler(_SchedulerBase):
+    name = "priority"
+
+    def order(self, queue, now):
+        return sorted(queue, key=lambda r: (-r.priority, r.arrival, r.id))
+
+
+@register_scheduler("sla_edf")
+class SlaEdfScheduler(_SchedulerBase):
+    name = "sla_edf"
+
+    def order(self, queue, now):
+        def deadline(r):
+            return r.arrival + r.sla if r.sla is not None else float("inf")
+
+        return sorted(queue, key=lambda r: (deadline(r), r.arrival, r.id))

@@ -1,0 +1,245 @@
+"""Layer 4 of the serving subsystem: *workloads* (``WORKLOADS``).
+
+A workload binds a pool to a request type and gives the engine one uniform
+surface: ``admit(request, slot, now)``, ``step(now) -> per-tick
+observations``, ``output(slot)``, ``retire(mask)``.  Registered factories
+(select-by-name, like every other subsystem registry):
+
+- ``llm_decode`` — greedy LLM decode over :class:`repro.serving.pool.DecodePool`
+  (the ``make_serve_step`` / ``make_cached_prefill_step`` model path, with
+  per-slot lengths).  Requests carry a token prompt, a generation budget
+  and an EOS id; terminates with ``eos_maxlen``.
+- ``fixedpoint_solve`` — per-query fixed-point solves from the
+  ``repro.asynchrony.SOLVERS`` registry (the D-iteration serving workload:
+  personalized PageRank-style damped diffusion, weighted-Jacobi systems).
+  Requests carry an affine payload (personalization vector / right-hand
+  side); terminates with ``residual_interval`` / ``residual_inexact`` —
+  the paper's detection protocols certifying each request's convergence.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.asynchrony.solvers import make_solver, random_dd_system
+from repro.serving.pool import DecodePool, FixedPointPool
+
+WORKLOADS: Dict[str, Callable[..., Any]] = {}
+
+
+def register_workload(name: str):
+    def deco(fn):
+        WORKLOADS[name] = fn
+        return fn
+
+    return deco
+
+
+def get_workload(name: str) -> Callable[..., Any]:
+    try:
+        return WORKLOADS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown workload {name!r}; registered: {sorted(WORKLOADS)}"
+        ) from None
+
+
+def make_workload(name: str, **kwargs):
+    return get_workload(name)(**kwargs)
+
+
+class LLMDecodeWorkload:
+    """Continuous greedy decode over a :class:`DecodePool`."""
+
+    residual_capable = False
+    default_termination = "eos_maxlen"
+    prefill_tokens = 1  # admission's prefill emits the first token
+
+    def __init__(
+        self,
+        *,
+        cfg,
+        mesh,
+        slots: int = 8,
+        max_len: int = 64,
+        max_prompt_len: int = 16,
+        params=None,
+        seed: int = 0,
+    ):
+        if cfg.is_encoder_only:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode serving")
+        from repro.models import transformer
+
+        self.cfg, self.mesh = cfg, mesh
+        self.pool = DecodePool(
+            cfg, mesh, slots=slots, max_len=max_len,
+            max_prompt_len=max_prompt_len,
+        )
+        if params is None:
+            with mesh:
+                params = transformer.init_params(cfg, jax.random.PRNGKey(seed))
+        self.params = params
+        self.slots = slots
+        self._out = [[] for _ in range(slots)]
+
+    @property
+    def wstate(self):
+        return self.pool.state
+
+    @wstate.setter
+    def wstate(self, value):
+        self.pool.state = value
+
+    def clamp_max_new(self, req) -> int:
+        """Generation budget that fits the slot's cache capacity."""
+        plen = int(np.asarray(req.prompt).shape[0])
+        return max(1, min(int(req.max_new), self.pool.max_len - plen - 1))
+
+    def admit(self, req, slot: int, now: int) -> None:
+        tok0 = self.pool.admit(self.params, req.prompt, slot)
+        self._out[slot] = [tok0]
+
+    def device_step(self, params, wstate, active, tick):
+        """Pure traced tick: ``-> (wstate, tokens [S], residual|None)``.
+
+        The engine fuses this with the termination tick into one jitted
+        dispatch per engine tick.
+        """
+        wstate = self.pool.device_step(params, wstate, active)
+        return wstate, wstate["tokens"], None
+
+    def collect_tick(self, tokens: np.ndarray, active: np.ndarray) -> None:
+        for s in np.nonzero(active)[0]:
+            self._out[s].append(int(tokens[s]))
+
+    def output(self, slot: int) -> np.ndarray:
+        return np.asarray(self._out[slot], np.int32)
+
+    def reset(self) -> None:
+        """Fresh pool state, compiled steps kept (cheap engine re-runs)."""
+        self.pool.reset()
+        self._out = [[] for _ in range(self.slots)]
+
+
+class FixedPointWorkload:
+    """Per-request fixed-point solves over a :class:`FixedPointPool`."""
+
+    residual_capable = True
+    default_termination = "residual_interval"
+    prefill_tokens = 0  # admission performs no iteration
+
+    def __init__(self, base, gain, payload0, *, slots: int, dp: int):
+        self.base = base
+        self.pool = FixedPointPool(
+            base, slots=slots, dp=dp, gain=gain, payload0=payload0
+        )
+        self.payload0 = np.asarray(payload0, np.float32)
+        self.slots, self.dp = slots, dp
+        self.params = {}  # no model params: uniform engine surface
+
+    @property
+    def wstate(self):
+        return self.pool.state
+
+    @wstate.setter
+    def wstate(self, value):
+        self.pool.state = value
+
+    def clamp_max_new(self, req) -> int:
+        return int(req.max_new)
+
+    def admit(self, req, slot: int, now: int) -> None:
+        payload = self.payload0 if req.payload is None else req.payload
+        self.pool.admit(payload, slot)
+
+    def device_step(self, params, wstate, active, tick):
+        wstate, residual = self.pool.device_step(wstate, active)
+        return wstate, jnp.zeros((self.slots,), jnp.int32), residual
+
+    def collect_tick(self, tokens: np.ndarray, active: np.ndarray) -> None:
+        pass  # outputs are read from the pool at retirement
+
+    def output(self, slot: int) -> np.ndarray:
+        return self.pool.solution(slot)
+
+    def reset(self) -> None:
+        self.pool.reset()
+
+    def true_residual(self, slot: int, payload) -> float:
+        """Ground-truth ||f(x)-x||_inf of the slot's iterate under its own
+        payload — what the certification soundness tests check."""
+        x = jnp.asarray(self.pool.solution(slot))
+        v = jnp.asarray(
+            self.payload0 if payload is None else np.asarray(payload, np.float32)
+        )
+        return float(jnp.max(jnp.abs(self.pool.param_map(x, v) - x)))
+
+
+@register_workload("llm_decode")
+def llm_decode(**kwargs) -> LLMDecodeWorkload:
+    return LLMDecodeWorkload(**kwargs)
+
+
+@register_workload("fixedpoint_solve")
+def fixedpoint_solve(
+    *,
+    solver: str = "d_iteration",
+    slots: int = 8,
+    dp: int = 1,
+    n: int = 64,
+    **solver_kwargs,
+) -> FixedPointWorkload:
+    """Build the fixed-point serving workload from a ``SOLVERS`` entry.
+
+    The pool shares one operator across slots and treats each request as an
+    affine payload, so only solvers whose parameter enters affinely (with a
+    known gain) are supported — which covers the serving-relevant families.
+    """
+    if solver == "d_iteration":
+        damping = float(solver_kwargs.pop("damping", 0.85))
+        v0 = solver_kwargs.pop("v", None)
+        if v0 is None:
+            v0 = np.full((n,), 1.0 / n, np.float32)
+        base = make_solver(
+            "d_iteration", n=n, damping=damping, v=jnp.asarray(v0),
+            **solver_kwargs,
+        )
+        gain = 1.0 - damping
+        payload0 = v0
+    elif solver == "poisson1d":
+        omega = float(solver_kwargs.pop("omega", 1.0))
+        shift = float(solver_kwargs.pop("shift", 0.0))
+        seed = int(solver_kwargs.pop("seed", 0))
+        scale = float(solver_kwargs.pop("rhs_scale", 10.0))
+        rhs = solver_kwargs.pop("rhs", None)
+        if rhs is None:
+            rhs = jax.random.uniform(
+                jax.random.PRNGKey(seed), (n,), minval=-scale, maxval=scale
+            )
+        base = make_solver(
+            "poisson1d", n=n, omega=omega, shift=shift, rhs=jnp.asarray(rhs),
+            **solver_kwargs,
+        )
+        gain = omega / (2.0 + shift)
+        payload0 = np.asarray(rhs, np.float32)
+    elif solver == "jacobi_dense":
+        omega = float(solver_kwargs.pop("omega", 1.0))
+        seed = int(solver_kwargs.pop("seed", 0))
+        dominance = float(solver_kwargs.pop("dominance", 2.0))
+        A, b = random_dd_system(n, seed=seed, dominance=dominance)
+        base = make_solver(
+            "jacobi_dense", A=jnp.asarray(A, jnp.float32),
+            b=jnp.asarray(b, jnp.float32), omega=omega,
+        )
+        gain = omega / np.diag(A).astype(np.float32)
+        payload0 = np.asarray(b, np.float32)
+    else:
+        raise ValueError(
+            f"fixedpoint_solve serves affine-payload solvers "
+            f"(d_iteration | poisson1d | jacobi_dense), got {solver!r}"
+        )
+    return FixedPointWorkload(base, gain, payload0, slots=slots, dp=dp)
