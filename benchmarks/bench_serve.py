@@ -16,12 +16,20 @@ Rows (CSV on stdout: name,value,derived):
 - ``serve_fixedpoint_<sched>`` — per-query D-iteration solves (requests/s)
   vs the barrier baseline (every wave iterates until its slowest query
   certifies — the global-barrier shape the paper's detection avoids).
+- ``serve_llm_{contig,paged}_sysprefix`` — the block-paged cache
+  (DESIGN.md S14) vs the contiguous pool on shared-system-prompt traffic:
+  the paged pool runs *twice* the slots in the same cache byte budget
+  (prefix blocks stored once + no per-slot worst-case reservation), with
+  bit-exact tokens.  LLM rows carry ``cache_mib`` / ``bytes_per_slot`` /
+  ``bytes_per_retired_token``.
 
 JSON: writes BENCH_serve.json ({"sweep": [...], "meta": {...}}).
 
 ``--quick`` shrinks the grid for CI smoke; ``--check`` asserts the
-acceptance gate: continuous >= static token throughput at the highest
-arrival rate (all requests queued at t=0).
+acceptance gates: continuous >= static token throughput at the highest
+arrival rate (all requests queued at t=0), and paged >= 1.5x concurrent
+requests per cache byte at no more than 10% token-throughput regression,
+token-for-token identical to contiguous.
 """
 
 from __future__ import annotations
@@ -47,6 +55,21 @@ def _traffic(n_req, prompt_len, gen_max, vocab, seed):
     prompts = [rng.integers(0, vocab, size=prompt_len) for _ in range(n_req)]
     budgets = [int(b) for b in rng.integers(max(2, gen_max // 3), gen_max + 1,
                                             size=n_req)]
+    return prompts, budgets
+
+
+def _system_traffic(n_req, vocab, seed, *, sys_len=24, user_len=4,
+                    gen_lo=6, gen_hi=10):
+    """Shared-system-prompt traffic: every request carries the same
+    ``sys_len``-token system prefix plus a short unique user suffix — the
+    shape prefix sharing exists for."""
+    rng = np.random.default_rng(seed)
+    sys_prefix = rng.integers(0, vocab, size=sys_len)
+    prompts = [
+        np.concatenate([sys_prefix, rng.integers(0, vocab, size=user_len)])
+        for _ in range(n_req)
+    ]
+    budgets = [int(b) for b in rng.integers(gen_lo, gen_hi + 1, size=n_req)]
     return prompts, budgets
 
 
@@ -105,8 +128,18 @@ def run_continuous_llm(workload, prompts, budgets, arrivals, scheduler):
         Request(id=i, arrival=a, prompt=p, max_new=b)
         for i, (p, b, a) in enumerate(zip(prompts, budgets, arrivals))
     ]
-    eng.run(reqs)
-    return eng.summary()
+    results = eng.run(reqs)
+    return eng.summary(), results
+
+
+def _mem_fields(workload, summary):
+    """Cache-memory accounting attached to every LLM sweep row."""
+    cb = workload.cache_bytes
+    return {
+        "cache_mib": round(cb / 2**20, 3),
+        "bytes_per_slot": cb // workload.slots,
+        "bytes_per_retired_token": round(cb / max(1, summary["tokens_out"]), 1),
+    }
 
 
 def run_fixedpoint(n, dp, slots, n_req, eps, scheduler, seed):
@@ -206,7 +239,8 @@ def main(json_path="BENCH_serve.json", quick=False, check=False):
     for sched in schedulers:
         for akind in arrival_kinds:
             arrivals = _arrivals(akind, n_req, seed + 3)
-            s = run_continuous_llm(workload, prompts, budgets, arrivals, sched)
+            s, _ = run_continuous_llm(workload, prompts, budgets, arrivals,
+                                      sched)
             row = {
                 "name": f"serve_llm_{sched}_{akind}",
                 "workload": "llm_decode", "scheduler": sched,
@@ -219,10 +253,79 @@ def main(json_path="BENCH_serve.json", quick=False, check=False):
                 "occupancy": round(s["occupancy"], 3),
                 "speedup_vs_static": round(
                     s["throughput_tok_s"] / static["tok_s"], 3),
+                **_mem_fields(workload, s),
             }
             rows.append(row)
             if sched == "fcfs" and akind == "burst":
                 burst_tok_s = s["throughput_tok_s"]
+
+    # --- paged vs contiguous: same cache bytes, 2x the slots --------------
+    # Shared-system-prompt burst traffic; the paged pool gets the same
+    # number of cache *blocks* the contiguous pool reserves (+1 trash
+    # block) but serves twice the slots out of them: the 3 system-prefix
+    # blocks are stored once, and nothing reserves max_len for short
+    # requests.  Tokens must match bit-for-bit (the paged step runs the
+    # identical decode vmap over gathered block views).
+    bs_blk = 8
+    sys_len, user_len, gen_hi = 24, 4, 10
+    p_prompt = sys_len + user_len
+    p_max_len = -(-(p_prompt + gen_hi + 2) // bs_blk) * bs_blk
+    sys_prompts, sys_budgets = _system_traffic(
+        n_req, cfg.vocab, seed + 11, sys_len=sys_len, user_len=user_len,
+        gen_hi=gen_hi,
+    )
+    burst = [0] * n_req
+    wl_contig = make_workload(
+        "llm_decode", cfg=cfg, mesh=mesh, slots=slots, max_len=p_max_len,
+        max_prompt_len=p_prompt, seed=seed,
+    )
+    w = slots + 1
+    run_continuous_llm(wl_contig, sys_prompts[:w], sys_budgets[:w],
+                       [0] * w, "fcfs")  # warm
+    sc, res_c = run_continuous_llm(wl_contig, sys_prompts, sys_budgets,
+                                   burst, "fcfs")
+    contig_row = {
+        "name": "serve_llm_contig_sysprefix", "workload": "llm_decode",
+        "slots": slots, "tok_s": round(sc["throughput_tok_s"], 1),
+        "occupancy": round(sc["occupancy"], 3),
+        **_mem_fields(wl_contig, sc),
+    }
+    rows.append(contig_row)
+
+    blocks_per_slot = p_max_len // bs_blk
+    wl_paged = make_workload(
+        "llm_decode_paged", cfg=cfg, mesh=mesh, slots=2 * slots,
+        max_len=p_max_len, max_prompt_len=p_prompt, seed=seed,
+        block_size=bs_blk, num_blocks=slots * blocks_per_slot + 1,
+    )
+    run_continuous_llm(wl_paged, sys_prompts[:w], sys_budgets[:w],
+                       [0] * w, "fcfs")  # warm
+    sp, res_p = run_continuous_llm(wl_paged, sys_prompts, sys_budgets,
+                                   burst, "fcfs")
+    bit_exact = all(
+        np.array_equal(res_c[i].output, res_p[i].output)
+        for i in range(n_req)
+    )
+    pm = _mem_fields(wl_paged, sp)
+    # concurrency each pool affords per MiB of cache
+    conc_ratio = (2 * slots / (pm["cache_mib"] or 1)) / (
+        slots / (contig_row["cache_mib"] or 1)
+    )
+    paged_row = {
+        "name": "serve_llm_paged_sysprefix", "workload": "llm_decode_paged",
+        "slots": 2 * slots, "num_blocks": slots * blocks_per_slot + 1,
+        "block_size": bs_blk,
+        "tok_s": round(sp["throughput_tok_s"], 1),
+        "occupancy": round(sp["occupancy"], 3),
+        "prefix_saved_blocks": wl_paged.prefix_saved_blocks,
+        "forced_at_capacity": sp["forced_at_capacity"],
+        "concurrency_per_byte_vs_contig": round(conc_ratio, 3),
+        "tok_s_vs_contig": round(
+            sp["throughput_tok_s"] / sc["throughput_tok_s"], 3),
+        "bit_exact_vs_contig": bit_exact,
+        **pm,
+    }
+    rows.append(paged_row)
 
     fp = run_fixedpoint(
         n=48 if quick else 66, dp=2 if quick else 3, slots=slots,
@@ -260,8 +363,19 @@ def main(json_path="BENCH_serve.json", quick=False, check=False):
         for r in rows:
             if r["workload"] == "fixedpoint_solve":
                 assert r["converged"] == n_req, r
+        assert paged_row["bit_exact_vs_contig"], (
+            "paged decode diverged from contiguous decode"
+        )
+        assert paged_row["concurrency_per_byte_vs_contig"] >= 1.5, paged_row
+        assert paged_row["tok_s_vs_contig"] >= 0.9, (
+            f"paged throughput regressed: {paged_row['tok_s_vs_contig']:.3f}x "
+            f"of contiguous (gate: >= 0.9x)"
+        )
         print(f"# sanity OK: continuous {burst_tok_s:.1f} tok/s >= "
-              f"static {static['tok_s']:.1f} tok/s; fixedpoint all certified")
+              f"static {static['tok_s']:.1f} tok/s; fixedpoint all certified; "
+              f"paged bit-exact at "
+              f"{paged_row['concurrency_per_byte_vs_contig']:.2f}x "
+              f"concurrency/byte, {paged_row['tok_s_vs_contig']:.2f}x tok/s")
 
 
 if __name__ == "__main__":

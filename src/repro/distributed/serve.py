@@ -183,6 +183,36 @@ def make_pool_decode_step(cfg: ModelConfig, mesh: Mesh):
     return pool_step, rules
 
 
+def _prefill_scan(cfg, rules, params, prompt, plen, cslot, max_prompt_len: int):
+    """Scan the decode step over a padded prompt into a one-slot cache view.
+
+    Shared by the contiguous and paged offset-prefill builders so both
+    admission paths trace the exact same jaxpr (bit-exactness discipline).
+    Positions ``>= plen`` run but are masked out of the carried cache; the
+    last live position's logits are latched.
+    """
+
+    def body(carry, xs):
+        c, last = carry
+        tok, i = xs
+        with shd.sharding_ctx(cfg, rules):
+            logits, c2 = transformer.forward_decode(
+                params, tok[None], c, i, cfg
+            )
+        live = i < plen
+        c = jax.tree.map(lambda a, b: jnp.where(live, a, b), c2, c)
+        last = jnp.where(i == plen - 1, logits[0], last)
+        return (c, last), None
+
+    (cslot, last_logits), _ = jax.lax.scan(
+        body,
+        (cslot, jnp.zeros((cfg.vocab,), jnp.float32)),
+        (prompt[:max_prompt_len], jnp.arange(max_prompt_len, dtype=jnp.int32)),
+        unroll=1,
+    )
+    return cslot, last_logits
+
+
 def make_slot_prefill_step(cfg: ModelConfig, mesh: Mesh, max_prompt_len: int):
     """Offset-prefill into a live cache slot (slot recycling).
 
@@ -198,7 +228,6 @@ def make_slot_prefill_step(cfg: ModelConfig, mesh: Mesh, max_prompt_len: int):
     rules = shd.make_rules(cfg, mesh, fsdp=_serve_needs_fsdp(cfg, mesh))
 
     def slot_prefill(params, prompt, plen, cache, slot):
-        axes = cache_batch_axes(cache)
         cslot = jax.tree_util.tree_map_with_path(
             lambda p, l: jnp.zeros_like(
                 jax.lax.dynamic_index_in_dim(
@@ -207,24 +236,8 @@ def make_slot_prefill_step(cfg: ModelConfig, mesh: Mesh, max_prompt_len: int):
             ),
             cache,
         )
-
-        def body(carry, xs):
-            c, last = carry
-            tok, i = xs
-            with shd.sharding_ctx(cfg, rules):
-                logits, c2 = transformer.forward_decode(
-                    params, tok[None], c, i, cfg
-                )
-            live = i < plen
-            c = jax.tree.map(lambda a, b: jnp.where(live, a, b), c2, c)
-            last = jnp.where(i == plen - 1, logits[0], last)
-            return (c, last), None
-
-        (cslot, last_logits), _ = jax.lax.scan(
-            body,
-            (cslot, jnp.zeros((cfg.vocab,), jnp.float32)),
-            (prompt[:max_prompt_len], jnp.arange(max_prompt_len, dtype=jnp.int32)),
-            unroll=1,
+        cslot, last_logits = _prefill_scan(
+            cfg, rules, params, prompt, plen, cslot, max_prompt_len
         )
         cache = jax.tree_util.tree_map_with_path(
             lambda p, l, s: jax.lax.dynamic_update_index_in_dim(
@@ -234,6 +247,239 @@ def make_slot_prefill_step(cfg: ModelConfig, mesh: Mesh, max_prompt_len: int):
             cache, cslot,
         )
         return last_logits, cache
+
+    return slot_prefill, rules
+
+
+# ---------------------------------------------------------------------------
+# Block-paged pool steps (repro.serving.paged, DESIGN.md S14)
+# ---------------------------------------------------------------------------
+
+# Cache leaves whose (slot, seq) slab is paged into fixed-size blocks of a
+# shared physical pool.  Everything else ("slot leaves": recurrent SSM/conv
+# state, rolling local windows) stays per-slot.  Every paged leaf has batch
+# (slot) axis 1 and sequence axis 2 in its contiguous layout.
+PAGED_LEAVES = ("k", "v", "k_scale", "v_scale", "attn_k", "attn_v")
+
+
+def split_paged_cache(cache):
+    """Split a decode cache dict into (paged leaves, per-slot leaves)."""
+    paged = {n: l for n, l in cache.items() if n in PAGED_LEAVES}
+    slot = {n: l for n, l in cache.items() if n not in PAGED_LEAVES}
+    return paged, slot
+
+
+def validate_pageable(cfg: ModelConfig, max_len: int) -> None:
+    """Raise unless this config's decode cache can be block-paged.
+
+    Pageable: dense/moe/vlm full-attention caches (no rolling sliding
+    window — a modular write index breaks the position->block mapping) and
+    hybrid attention caches (the Mamba h/conv state stays per-slot).
+    """
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.pattern_local:
+            raise ValueError(
+                f"{cfg.name}: local-attention layers write their cache "
+                "modulo the window; rolling windows are not pageable — "
+                "use the contiguous pool"
+            )
+        if cfg.sliding_window and cfg.sliding_window < max_len:
+            raise ValueError(
+                f"{cfg.name}: sliding_window={cfg.sliding_window} < "
+                f"max_len={max_len} writes the cache modulo the window; "
+                "rolling windows are not pageable — use the contiguous pool"
+            )
+        return
+    if cfg.family == "hybrid":
+        return
+    raise ValueError(
+        f"family {cfg.family!r} has no pageable KV cache (recurrent state "
+        "is O(1) per slot already) — use the contiguous pool"
+    )
+
+
+def init_paged_pool(cfg: ModelConfig, max_len: int, num_blocks: int,
+                    block_size: int):
+    """Physical block pools for every paged cache leaf.
+
+    A contiguous leaf ``[D0, B, W, *tail]`` becomes a pool
+    ``[D0, num_blocks, block_size, *tail]`` shared by all slots; per-slot
+    block tables map logical block ``j`` (positions ``[j*bs, (j+1)*bs)``)
+    to a physical block.  Block 0 is reserved as the *trash* block —
+    device-side writes for inactive/masked slots are redirected there so
+    the fused tick never branches on host allocator state.
+    """
+    validate_pageable(cfg, max_len)
+    tmpl, _ = split_paged_cache(transformer.init_cache(cfg, 1, max_len))
+    pool = {}
+    for n, l in tmpl.items():
+        if l.shape[2] != max_len:
+            raise ValueError(f"paged leaf {n}: seq dim {l.shape[2]} != max_len")
+        pool[n] = jnp.zeros(
+            l.shape[:1] + (num_blocks, block_size) + l.shape[3:], l.dtype
+        )
+    return pool
+
+
+def paged_pool_specs(cfg: ModelConfig, rules: shd.ShardingRules, pool: Any):
+    """PartitionSpecs for a paged block pool.
+
+    Head/hd tail axes shard exactly like the contiguous cache leaf; the
+    (num_blocks, block_size) axes are replicated — blocks must move between
+    slots without resharding.
+    """
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        if name in ("k_scale", "v_scale"):  # [L, N, bs, KV]
+            sdim = (
+                rules.tp_axis
+                if (not rules.kv_heads_sharded and leaf.shape[3] % rules.tp == 0)
+                else None
+            )
+            return P(None, None, None, sdim)
+        # [D0, N, bs, KV, hd]
+        if rules.kv_heads_sharded:
+            return P(None, None, None, rules.tp_axis, None)
+        return P(
+            None, None, None,
+            rules.tp_axis if leaf.shape[3] % rules.tp == 0 else None, None,
+        )
+
+    return jax.tree_util.tree_map_with_path(spec, pool)
+
+
+def gather_block_views(pool_leaf, tables):
+    """Assemble per-slot contiguous views through the block tables.
+
+    ``pool_leaf [D0, N, bs, *tail]`` + ``tables [S, nb]`` ->
+    ``[D0, S, nb*bs, *tail]`` — exactly the contiguous cache layout, so the
+    unchanged per-slot decode vmap consumes it and its math (shapes,
+    reduction orders) is bit-identical to the contiguous pool step.
+    Positions beyond a slot's allocation read the trash block; attention
+    masks them with NEG_INF before the softmax max, so they contribute an
+    exact 0.0 either way.
+    """
+    g = jnp.take(pool_leaf, tables, axis=1)  # [D0, S, nb, bs, *tail]
+    return g.reshape(
+        g.shape[0], g.shape[1], g.shape[2] * g.shape[3], *g.shape[4:]
+    )
+
+
+def make_paged_pool_decode_step(cfg: ModelConfig, mesh: Mesh, block_size: int,
+                                attn: str = "gather"):
+    """Paged decode step: gather views -> contiguous pool step -> row scatter.
+
+    ``pool_step(params, tokens [S], pages, tables [S,nb], slot_state,
+    lengths [S], write_ok [S]) -> (logits [S,V], pages, slot_state)``.
+
+    ``attn="gather"`` (default) runs the *unchanged* contiguous per-slot
+    decode vmap over block-table-gathered views — bit-exact with the
+    contiguous pool by construction — then scatters the single written row
+    per slot back into its physical (block, offset).  ``attn="pallas"``
+    dispatches :func:`repro.models.transformer.forward_decode_paged`, which
+    reads K/V through the block table *inside* the Pallas paged-attention
+    kernel (no materialized views; the TPU hot path).  ``write_ok`` masks
+    slots whose write is redirected to the trash block (inactive slots stay
+    one fused dispatch without host branching).
+    """
+    if attn == "pallas":
+        rules = shd.make_rules(cfg, mesh, fsdp=_serve_needs_fsdp(cfg, mesh))
+
+        def pool_step_pallas(params, tokens, pages, tables, slot_state,
+                             lengths, write_ok):
+            with shd.sharding_ctx(cfg, rules):
+                return transformer.forward_decode_paged(
+                    params, tokens, pages, tables, slot_state, lengths, cfg,
+                    block_size=block_size, write_ok=write_ok,
+                )
+
+        return pool_step_pallas, rules
+    if attn != "gather":
+        raise ValueError(f"attn must be 'gather' or 'pallas', got {attn!r}")
+
+    contiguous_step, rules = make_pool_decode_step(cfg, mesh)
+
+    def pool_step(params, tokens, pages, tables, slot_state, lengths, write_ok):
+        view = {n: gather_block_views(pages[n], tables) for n in pages}
+        logits, cache2 = contiguous_step(
+            params, tokens, {**view, **slot_state}, lengths
+        )
+        # physical (block, offset) of the one row each slot wrote; masked
+        # slots land in the reserved trash block 0
+        pb = jnp.take_along_axis(
+            tables, (lengths // block_size)[:, None], axis=1
+        )[:, 0]
+        pb = jnp.where(write_ok, pb, 0)
+        off = jnp.where(write_ok, lengths % block_size, 0)
+        pages2 = {}
+        for n in pages:
+            idx = lengths.reshape((1, -1, 1) + (1,) * (cache2[n].ndim - 3))
+            row = jnp.squeeze(
+                jnp.take_along_axis(cache2[n], idx, axis=2), 2
+            )  # [D0, S, *tail]
+            pages2[n] = pages[n].at[:, pb, off].set(row)
+        slot2 = {n: cache2[n] for n in slot_state}
+        return logits, pages2, slot2
+
+    return pool_step, rules
+
+
+def make_paged_slot_prefill_step(cfg: ModelConfig, mesh: Mesh,
+                                 max_prompt_len: int, max_len: int,
+                                 block_size: int):
+    """Offset-prefill a prompt into a slot's *block table* (paged admission).
+
+    ``slot_prefill(params, prompt [Lmax], plen, pages, tables, slot_state,
+    slot, table_row [nb], write_mask [nb]) -> (last_logits [V], pages,
+    tables, slot_state)``.
+
+    Runs the shared :func:`_prefill_scan` over a zeroed full-length view
+    (same jaxpr as the contiguous admission — bit-exactness), then scatters
+    whole blocks into the physical pool: logical block ``j`` goes to
+    ``table_row[j]`` where ``write_mask[j]``, else to the trash block —
+    shared prefix blocks are *skip-written* (their recomputed content is
+    bit-identical by determinism; the registered copy stays untouched).
+    Shapes are fixed by ``max_prompt_len``/``nb``, so admission never
+    recompiles.
+    """
+    rules = shd.make_rules(cfg, mesh, fsdp=_serve_needs_fsdp(cfg, mesh))
+    tmpl, _ = split_paged_cache(transformer.init_cache(cfg, 1, max_len))
+    shapes = {n: (l.shape, l.dtype) for n, l in tmpl.items()}
+
+    def slot_prefill(params, prompt, plen, pages, tables, slot_state, slot,
+                     table_row, write_mask):
+        view0 = {n: jnp.zeros(sh, dt) for n, (sh, dt) in shapes.items()}
+        slot0 = jax.tree_util.tree_map_with_path(
+            lambda p, l: jnp.zeros_like(
+                jax.lax.dynamic_index_in_dim(
+                    l, slot, axis=_CACHE_BATCH_AXIS[_leaf_name(p)], keepdims=True
+                )
+            ),
+            slot_state,
+        )
+        cslot, last_logits = _prefill_scan(
+            cfg, rules, params, prompt, plen, {**view0, **slot0},
+            max_prompt_len,
+        )
+        nb = table_row.shape[0]
+        dst = jnp.where(write_mask, table_row, 0)
+        pages2 = {}
+        for n in pages:
+            leaf = jnp.squeeze(cslot[n], 1)  # [D0, W, *tail]
+            blocks = leaf.reshape(
+                leaf.shape[0], nb, block_size, *leaf.shape[2:]
+            )
+            pages2[n] = pages[n].at[:, dst].set(blocks)
+        slot2 = jax.tree_util.tree_map_with_path(
+            lambda p, l, s: jax.lax.dynamic_update_index_in_dim(
+                l, jnp.squeeze(s, _CACHE_BATCH_AXIS[_leaf_name(p)]), slot,
+                axis=_CACHE_BATCH_AXIS[_leaf_name(p)],
+            ),
+            slot_state, {n: cslot[n] for n in slot_state},
+        )
+        tables2 = tables.at[slot].set(table_row)
+        return last_logits, pages2, tables2, slot2
 
     return slot_prefill, rules
 

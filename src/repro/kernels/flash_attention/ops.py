@@ -12,6 +12,7 @@ import functools
 import jax
 
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.paged_kernel import paged_attention_fwd
 
 
 @functools.partial(
@@ -27,4 +28,19 @@ def flash_attention(
         q, k, v,
         causal=causal, window=window, q_offset=q_offset,
         bq=bq, bk=bk, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    interpret=None):
+    """Decode attention over a block-paged KV cache (one query/sequence).
+
+    q: [S, H, hd]; k_pages/v_pages: [N, block_size, KV, hd] physical pool;
+    block_tables: [S, nb]; lengths: [S] valid positions -> [S, H, hd].
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return paged_attention_fwd(
+        q, k_pages, v_pages, block_tables, lengths, interpret=interpret
     )

@@ -1,0 +1,110 @@
+"""Pallas paged-attention decode kernel: K/V gathered through a block table.
+
+Serving decode with a block-paged cache (DESIGN.md S14): each sequence's
+K/V lives in fixed-size blocks scattered across a shared physical pool
+``[num_blocks, block_size, KV, hd]``, addressed by a per-sequence block
+table.  One decode query attends over its blocks by walking the table
+*inside* the kernel with ``pl.ds`` dynamic slices — no gathered/contiguous
+copy of the cache is ever materialized.
+
+Grid: (S * KV,) — one program per (sequence, kv-head).  The GQA query
+group (rep = H // KV) rides in the sublane dimension, so the score matrix
+per block is [rep, block_size] and the online-softmax running state
+(m, l, acc) matches ``kernel.py``'s flash forward exactly.  The loop bound
+is the *dynamic* ``ceil(length / block_size)``, so a short sequence in a
+long table does proportional work.
+
+On production TPU the block table and length belong in SMEM via
+``pltpu.PrefetchScalarGridSpec`` so the address arithmetic runs ahead of
+the VMEM data fetches; interpret mode (CPU CI) has no SMEM, so they ride
+as ordinary VMEM operands here — the access *pattern* (gather by table,
+online softmax over blocks, trash-block masking) is identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    q_ref,    # [rep, hd]       queries of this sequence's kv-head group
+    bt_ref,   # [nb] int32      the sequence's block table
+    len_ref,  # [1] int32       valid cache positions
+    k_ref,    # [N*bs, hd]      flattened physical pool, this kv head
+    v_ref,    # [N*bs, hd]
+    o_ref,    # [rep, hd]
+    *,
+    block_size: int,
+):
+    rep, hd = q_ref.shape
+    q = q_ref[...].astype(jnp.float32) * (hd**-0.5)
+    length = len_ref[0]
+    nblk = pl.cdiv(length, block_size)
+
+    def body(j, carry):
+        m_run, l_run, acc = carry
+        pb = bt_ref[j]
+        k_blk = k_ref[pl.ds(pb * block_size, block_size), :].astype(jnp.float32)
+        v_blk = v_ref[pl.ds(pb * block_size, block_size), :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k_blk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [rep, bs]
+        k_pos = j * block_size + jax.lax.iota(jnp.int32, block_size)
+        s = jnp.where(k_pos[None, :] < length, s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_run * alpha + p.sum(axis=1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return m_new, l_new, acc
+
+    m0 = jnp.full((rep,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((rep,), jnp.float32)
+    a0 = jnp.zeros((rep, hd), jnp.float32)
+    m_f, l_f, acc = jax.lax.fori_loop(0, nblk, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l_f, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_fwd(q, k_pages, v_pages, block_tables, lengths, *,
+                        interpret: bool = False):
+    """q: [S, H, hd]; k_pages/v_pages: [N, bs, KV, hd];
+    block_tables: [S, nb] int; lengths: [S] int (valid positions per
+    sequence) -> [S, H, hd]."""
+    S, H, hd = q.shape
+    N, bs, KV, _ = k_pages.shape
+    rep = H // KV
+    nb = block_tables.shape[1]
+
+    # layout: [S*KV, rep, hd] for q; [KV, N*bs, hd] pool stripes for kv
+    qx = q.reshape(S, KV, rep, hd).reshape(S * KV, rep, hd)
+    kx = k_pages.transpose(2, 0, 1, 3).reshape(KV, N * bs, hd)
+    vx = v_pages.transpose(2, 0, 1, 3).reshape(KV, N * bs, hd)
+    bt = block_tables.astype(jnp.int32)
+    ln = lengths.astype(jnp.int32).reshape(S, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, block_size=bs),
+        grid=(S * KV,),
+        in_specs=[
+            pl.BlockSpec((None, rep, hd), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, nb), lambda i: (i // KV, 0)),
+            pl.BlockSpec((None, 1), lambda i: (i // KV, 0)),
+            pl.BlockSpec((None, N * bs, hd), lambda i: (i % KV, 0, 0)),
+            pl.BlockSpec((None, N * bs, hd), lambda i: (i % KV, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, rep, hd), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S * KV, rep, hd), q.dtype),
+        interpret=interpret,
+    )(qx, bt, ln, kx, vx)
+
+    return out.reshape(S, KV, rep, hd).reshape(S, H, hd)

@@ -26,3 +26,27 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bgrqk,bkgh->bqgrh", p, v.astype(jnp.float32))
     return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths):
+    """Oracle for the paged decode kernel: gather blocks into contiguous
+    views, then masked fp32 softmax attention.
+
+    q: [S, H, hd]; k_pages/v_pages: [N, bs, KV, hd]; block_tables: [S, nb];
+    lengths: [S] -> [S, H, hd].
+    """
+    S, H, hd = q.shape
+    _, bs, KV, _ = k_pages.shape
+    rep = H // KV
+    k = jnp.take(k_pages, block_tables, axis=0)  # [S, nb, bs, KV, hd]
+    v = jnp.take(v_pages, block_tables, axis=0)
+    W = k.shape[1] * bs
+    k = k.reshape(S, W, KV, hd)
+    v = v.reshape(S, W, KV, hd)
+    qg = (q.astype(jnp.float32) * hd**-0.5).reshape(S, KV, rep, hd)
+    s = jnp.einsum("sgrh,skgh->sgrk", qg, k.astype(jnp.float32))
+    mask = jnp.arange(W)[None, :] < lengths[:, None]  # [S, W]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("sgrk,skgh->sgrh", p, v.astype(jnp.float32))
+    return out.reshape(S, H, hd).astype(q.dtype)

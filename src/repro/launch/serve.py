@@ -12,6 +12,11 @@ Continuous batching via the ``repro.serving`` subsystem (DESIGN.md S13):
       --continuous --slots 4 --requests 16 --arrival poisson:0.5 \\
       --scheduler fcfs --gen 24
 
+  # block-paged cache with prefix sharing (DESIGN.md S14): same tokens,
+  # more concurrent requests per byte of cache
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \\
+      --continuous --workload llm_decode_paged --slots 8 --block-size 8
+
   # per-query fixed-point solves (D-iteration / personalized PageRank),
   # retired by the paper's detection protocol, agreement across --dp replicas
   PYTHONPATH=src python -m repro.launch.serve --continuous \\
@@ -114,11 +119,19 @@ def _continuous_main(args, cfg, mesh):
     rng = np.random.default_rng(args.seed)
     arrivals = _arrival_ticks(args.arrival, args.requests, args.seed + 7)
 
-    if args.workload == "llm_decode":
+    if args.workload in ("llm_decode", "llm_decode_paged"):
         max_len = args.max_len or (args.prompt_len + args.gen + 4)
+        kw = {}
+        if args.workload == "llm_decode_paged":
+            bs = args.block_size
+            max_len = ((max_len + bs - 1) // bs) * bs  # whole blocks
+            kw = {"block_size": bs}
+            if args.num_blocks:
+                kw["num_blocks"] = args.num_blocks
         wl = make_workload(
-            "llm_decode", cfg=cfg, mesh=mesh, slots=args.slots,
+            args.workload, cfg=cfg, mesh=mesh, slots=args.slots,
             max_len=max_len, max_prompt_len=args.prompt_len, seed=args.seed,
+            **kw,
         )
         termination = args.termination or "eos_maxlen"
         reqs = [
@@ -162,6 +175,11 @@ def _continuous_main(args, cfg, mesh):
           f"{s['occupancy']:.2f} | converged {s['converged']}/{s['completed']}")
     print(f"  TTFT p50/p95 {s['ttft_p50_ms']:.1f}/{s['ttft_p95_ms']:.1f} ms | "
           f"TPOT p50/p95 {s['tpot_p50_ms']:.2f}/{s['tpot_p95_ms']:.2f} ms")
+    if hasattr(wl, "cache_bytes"):
+        extra = (f" | prefix blocks saved {wl.prefix_saved_blocks}"
+                 if hasattr(wl, "prefix_saved_blocks") else "")
+        print(f"  cache {wl.cache_bytes / 2**20:.2f} MiB | forced-at-capacity "
+              f"{s['forced_at_capacity']}{extra}")
     first = res[min(res)]
     tail = (first.output[:8].tolist() if first.output.dtype.kind == "i"
             else np.round(first.output[:4], 5).tolist())
@@ -193,6 +211,11 @@ def main(argv=None):
                     help="none | poisson:RATE (req/tick) | trace:FILE (JSON ticks)")
     ap.add_argument("--max-len", type=int, default=0,
                     help="pool cache length (0 = prompt+gen+margin)")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="llm_decode_paged: tokens per cache block")
+    ap.add_argument("--num-blocks", type=int, default=0,
+                    help="llm_decode_paged: physical blocks "
+                         "(0 = contiguous-capacity parity)")
     ap.add_argument("--solver", default="d_iteration",
                     help="fixedpoint_solve: SOLVERS entry (affine payload)")
     ap.add_argument("--n", type=int, default=64, help="fixedpoint problem size")

@@ -537,3 +537,115 @@ def forward_decode(params, tokens, cache, cache_len, cfg: ModelConfig):
 
     x = rmsnorm(x[:, None], params["final_norm"], cfg.norm_eps)[:, 0]
     return _logits(params, x, cfg), cache
+
+
+def _paged_attn_layer(lp, x_tok, kp, vp, tables, lengths, pb, off, cfg, *,
+                      theta):
+    """Decode attention layer over block-paged K/V pools.
+
+    x_tok: [S, d]; kp/vp: [N, bs, KV, hd] physical pools (one layer);
+    tables: [S, nb]; lengths: [S]; (pb, off): precomputed physical
+    (block, offset) of each slot's write (trash-redirected for masked
+    slots).  The Pallas paged-attention kernel reads K/V through the block
+    table — no contiguous views are materialized.
+    """
+    from repro.kernels.flash_attention.ops import paged_attention
+
+    S = x_tok.shape[0]
+    h = rmsnorm(x_tok[:, None], lp["ln1"], cfg.norm_eps)
+    pos = lengths[:, None]
+    q, k, v = qkv_project(lp["attn"], h, cfg, pos, theta)
+    kp = kp.at[pb, off].set(k[:, 0])
+    vp = vp.at[pb, off].set(v[:, 0])
+    o = paged_attention(q[:, 0], kp, vp, tables, lengths + 1)
+    x = x_tok + (o.reshape(S, -1) @ lp["attn"]["wo"])
+    if cfg.family == "moe":
+        y, _ = moe_lib.moe_apply(
+            lp["moe"], rmsnorm(x[:, None], lp["ln2"], cfg.norm_eps), cfg
+        )
+        x = x + y[:, 0]
+    else:
+        y = mlp_apply(
+            lp["mlp"], rmsnorm(x[:, None], lp["ln2"], cfg.norm_eps), cfg.act
+        )
+        x = x + y[:, 0]
+    return x, kp, vp
+
+
+def forward_decode_paged(params, tokens, pages, tables, slot_state, lengths,
+                         cfg: ModelConfig, *, block_size: int, write_ok=None):
+    """One batched decode step over a block-paged cache (DESIGN.md S14).
+
+    tokens: [S] int32; pages: paged cache pools (``k``/``v`` [L,N,bs,KV,hd]
+    for dense/moe/vlm, ``attn_k``/``attn_v`` [G,N,bs,KV,hd] for hybrid);
+    tables: [S, nb]; slot_state: per-slot leaves (hybrid ``m_h``/``m_conv``);
+    lengths: [S]; write_ok: [S] bool (False redirects the slot's cache write
+    to the trash block 0).  Returns (logits [S, V], pages, slot_state).
+
+    Attention runs through the Pallas paged kernel per layer; all other math
+    matches :func:`forward_decode`.  int8 KV quantization is served by the
+    gather path instead (``make_paged_pool_decode_step(attn="gather")``).
+    """
+    if "k_scale" in pages:
+        raise NotImplementedError(
+            "int8 paged decode is served by the gather path (attn='gather')"
+        )
+    S = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype_of(cfg.compute_dtype))
+    ok = jnp.ones((S,), bool) if write_ok is None else write_ok
+    pb = jnp.take_along_axis(tables, (lengths // block_size)[:, None], axis=1)[:, 0]
+    pb = jnp.where(ok, pb, 0)
+    off = jnp.where(ok, lengths % block_size, 0)
+
+    if cfg.family in ("dense", "moe", "vlm") and not cfg.pattern_local:
+
+        def body(carry, xs):
+            lp, kp, vp = xs
+            h, kp, vp = _paged_attn_layer(
+                lp, carry, kp, vp, tables, lengths, pb, off, cfg,
+                theta=cfg.rope_theta,
+            )
+            return h, (kp, vp)
+
+        x, (k2, v2) = jax.lax.scan(
+            body, x, (params["layers"], pages["k"], pages["v"]),
+            unroll=cfg.scan_unroll,
+        )
+        pages2 = {"k": k2, "v": v2}
+        slot2 = {}
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def mamba_body(carry, xs):
+            lp, h_st, conv_st = xs
+            y, new = ssm_lib.mamba2_decode(
+                lp["mamba"], rmsnorm(carry[:, None], lp["ln"], cfg.norm_eps)[:, 0],
+                {"h": h_st, "conv": conv_st}, cfg,
+            )
+            return carry + y, (new["h"], new["conv"])
+
+        def group_body(carry, xs):
+            gp, mh, mconv, akp, avp = xs
+            h, (mh2, mc2) = jax.lax.scan(
+                mamba_body, carry, (gp, mh, mconv), unroll=cfg.scan_unroll
+            )
+            h, ak2, av2 = _paged_attn_layer(
+                shared, h, akp, avp, tables, lengths, pb, off, cfg,
+                theta=cfg.rope_theta,
+            )
+            return h, (mh2, mc2, ak2, av2)
+
+        x, (mh, mc, ak, av) = jax.lax.scan(
+            group_body, x,
+            (params["mamba_groups"], slot_state["m_h"], slot_state["m_conv"],
+             pages["attn_k"], pages["attn_v"]),
+            unroll=cfg.scan_unroll,
+        )
+        pages2 = {"attn_k": ak, "attn_v": av}
+        slot2 = {"m_h": mh, "m_conv": mc}
+    else:
+        raise ValueError(f"family {cfg.family!r} has no paged decode path")
+
+    x = rmsnorm(x[:, None], params["final_norm"], cfg.norm_eps)[:, 0]
+    return _logits(params, x, cfg), pages2, slot2

@@ -6,6 +6,7 @@ registries, one engine composing them —
 | layer | module | registry |
 |---|---|---|
 | decode pools | ``serving/pool.py`` | (pool classes; jitted slot steps) |
+| paged cache | ``serving/paged.py`` | (block allocator + paged pool, S14) |
 | schedulers | ``serving/schedulers.py`` | ``SCHEDULERS`` |
 | termination | ``serving/termination.py`` | ``TERMINATION`` |
 | workloads | ``serving/workloads.py`` | ``WORKLOADS`` |
@@ -27,6 +28,7 @@ from repro.serving.engine import (  # noqa: F401
     ServeConfig,
     ServeEngine,
 )
+from repro.serving.paged import BlockAllocator, PagedDecodePool  # noqa: F401
 from repro.serving.pool import DecodePool, FixedPointPool  # noqa: F401
 from repro.serving.schedulers import (  # noqa: F401
     SCHEDULERS,

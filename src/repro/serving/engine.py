@@ -110,6 +110,7 @@ class ServeEngine:
         certifying = cfg.termination.startswith("residual")
         dp, slots = cfg.dp, self.slots
         term, tcfg = self.term, self.tcfg
+        cap_fn = getattr(workload, "capacity_mask", None)
 
         def _fused(params, wstate, tstate, ctrl, tick):
             wstate, tokens, residual = workload.device_step(
@@ -132,12 +133,24 @@ class ServeEngine:
                 forced = ctrl["active"] & (new_tokens >= ctrl["max_new"]) & ~retire
             else:
                 forced = jnp.zeros_like(retire)
+            if cap_fn is not None:
+                # slot frozen at cache capacity but not naturally done: it
+                # can produce no further useful tokens, so force-retire NOW
+                # (previously such slots spun silently until their budget)
+                # — surfaced separately as `forced_at_capacity`
+                nat = (tokens == ctrl["eos"]) | (new_tokens >= ctrl["max_new"])
+                at_cap = (
+                    ctrl["active"] & cap_fn(wstate) & ~nat & ~retire & ~forced
+                )
+            else:
+                at_cap = jnp.zeros_like(retire)
+            forced = forced | at_cap
             ctrl = {
                 **ctrl,
                 "active": ctrl["active"] & ~(retire | forced),
                 "new_tokens": new_tokens,
             }
-            return wstate, tstate, ctrl, retire, forced, tokens
+            return wstate, tstate, ctrl, retire, forced, at_cap, tokens
 
         K = cfg.steps_per_dispatch
 
@@ -151,7 +164,7 @@ class ServeEngine:
 
             def body(c):
                 i = c["i"]
-                wstate, tstate, ctrl, retire, forced, tokens = _fused(
+                wstate, tstate, ctrl, retire, forced, at_cap, tokens = _fused(
                     params, c["wstate"], c["tstate"], c["ctrl"], tick0 + i
                 )
                 return {
@@ -162,6 +175,7 @@ class ServeEngine:
                     "tokens_buf": c["tokens_buf"].at[i].set(tokens),
                     "retire_buf": c["retire_buf"].at[i].set(retire),
                     "forced_buf": c["forced_buf"].at[i].set(forced),
+                    "cap_buf": c["cap_buf"].at[i].set(at_cap),
                 }
 
             init = {
@@ -172,6 +186,7 @@ class ServeEngine:
                 "tokens_buf": jnp.zeros((K, slots), jnp.int32),
                 "retire_buf": jnp.zeros((K, slots), jnp.bool_),
                 "forced_buf": jnp.zeros((K, slots), jnp.bool_),
+                "cap_buf": jnp.zeros((K, slots), jnp.bool_),
             }
             return jax.lax.while_loop(cond, body, init)
 
@@ -205,6 +220,7 @@ class ServeEngine:
         # metrics accumulators
         self._occupancy_ticks = 0
         self._occupancy_sum = 0.0
+        self._forced_at_capacity = 0
         self._t_start: Optional[float] = None
         self._t_last = 0.0
 
@@ -262,7 +278,10 @@ class ServeEngine:
         free = self._free_slots()
         if self.cfg.max_admit_per_tick:
             free = free[: self.cfg.max_admit_per_tick]
+        gate = getattr(self.workload, "can_admit", None)
         for req, slot in self.scheduler.select(self.queue, free, now):
+            if gate is not None and not gate(req):
+                continue  # out of cache blocks: req waits in the queue
             self.queue.remove(req)
             t0 = time.perf_counter()
             self.workload.admit(req, slot, now)
@@ -334,6 +353,7 @@ class ServeEngine:
         last = n_ticks - 1
         retire = np.asarray(final["retire_buf"])[last]
         forced = np.asarray(final["forced_buf"])[last]
+        at_cap = np.asarray(final["cap_buf"])[last]
         out_mask = retire | forced
         if out_mask.any():
             self._active[out_mask] = False
@@ -341,12 +361,16 @@ class ServeEngine:
             t_done = time.perf_counter()
             for slot in np.nonzero(out_mask)[0]:
                 self._collect(int(slot), now + last, certified,
-                              bool(forced[slot]), t_done)
+                              bool(forced[slot]), t_done,
+                              at_capacity=bool(at_cap[slot]))
         self.tick = now + n_ticks
         self._t_last = time.perf_counter()
         return out_mask
 
-    def _collect(self, slot, now, certified, was_forced, t_done):
+    def _collect(self, slot, now, certified, was_forced, t_done,
+                 at_capacity=False):
+        if at_capacity:
+            self._forced_at_capacity += 1
         req = self.slot_req[slot]
         out = self.workload.output(slot)
         n_tok = int(self._new_tokens[slot])
@@ -370,6 +394,9 @@ class ServeEngine:
             converged=not was_forced, ttft_s=ttft, tpot_s=tpot,
         )
         self.slot_req[slot] = None
+        rel = getattr(self.workload, "release", None)
+        if rel is not None:
+            rel(slot)  # paged pools return the slot's blocks to the allocator
 
     # -- drive to completion ------------------------------------------------
 
@@ -415,4 +442,5 @@ class ServeEngine:
                 if self._occupancy_ticks else 0.0
             ),
             "converged": int(sum(r.converged for r in res)),
+            "forced_at_capacity": self._forced_at_capacity,
         }

@@ -110,6 +110,16 @@ class DecodePool:
             "lengths": jax.device_put(jnp.zeros((self.slots,), jnp.int32), rep),
         }
 
+    def capacity_mask(self, state):
+        """Traced: slots frozen at the cache capacity clamp."""
+        return state["lengths"] >= self.max_len - 1
+
+    @property
+    def cache_bytes(self) -> int:
+        return int(
+            sum(l.nbytes for l in jax.tree.leaves(self.state["cache"]))
+        )
+
     def admit(self, params, prompt, slot: int) -> int:
         """Offset-prefill ``prompt`` (1-D int array) into ``slot``.
 

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.asynchrony.solvers import make_solver, random_dd_system
+from repro.serving.paged import PagedDecodePool
 from repro.serving.pool import DecodePool, FixedPointPool
 
 WORKLOADS: Dict[str, Callable[..., Any]] = {}
@@ -69,15 +70,16 @@ class LLMDecodeWorkload:
         max_prompt_len: int = 16,
         params=None,
         seed: int = 0,
+        **pool_kwargs,
     ):
         if cfg.is_encoder_only:
             raise ValueError(f"{cfg.name} is encoder-only: no decode serving")
         from repro.models import transformer
 
         self.cfg, self.mesh = cfg, mesh
-        self.pool = DecodePool(
+        self.pool = self._make_pool(
             cfg, mesh, slots=slots, max_len=max_len,
-            max_prompt_len=max_prompt_len,
+            max_prompt_len=max_prompt_len, **pool_kwargs,
         )
         if params is None:
             with mesh:
@@ -86,6 +88,9 @@ class LLMDecodeWorkload:
         self.slots = slots
         self._out = [[] for _ in range(slots)]
 
+    def _make_pool(self, cfg, mesh, **kw):
+        return DecodePool(cfg, mesh, **kw)
+
     @property
     def wstate(self):
         return self.pool.state
@@ -93,6 +98,15 @@ class LLMDecodeWorkload:
     @wstate.setter
     def wstate(self, value):
         self.pool.state = value
+
+    @property
+    def cache_bytes(self) -> int:
+        return self.pool.cache_bytes
+
+    def capacity_mask(self, wstate):
+        """Traced: active slots frozen at cache capacity (the engine
+        force-retires them and counts ``forced_at_capacity``)."""
+        return self.pool.capacity_mask(wstate)
 
     def clamp_max_new(self, req) -> int:
         """Generation budget that fits the slot's cache capacity."""
@@ -123,6 +137,39 @@ class LLMDecodeWorkload:
         """Fresh pool state, compiled steps kept (cheap engine re-runs)."""
         self.pool.reset()
         self._out = [[] for _ in range(self.slots)]
+
+
+class PagedLLMWorkload(LLMDecodeWorkload):
+    """Continuous greedy decode over a :class:`PagedDecodePool`.
+
+    Same engine surface as :class:`LLMDecodeWorkload` plus the paged
+    hooks: ``can_admit`` (block-budget backpressure — requests wait in the
+    queue when the pool is out of blocks), ``release`` (blocks return to
+    the allocator at retirement), and per-slot ``capacity_mask``.
+    Admission reserves blocks for the request's whole clamped budget, so
+    the fused multi-tick dispatch never faults on a missing block.
+    """
+
+    def _make_pool(self, cfg, mesh, **kw):
+        return PagedDecodePool(cfg, mesh, **kw)
+
+    def admit(self, req, slot: int, now: int) -> None:
+        tok0 = self.pool.admit(
+            self.params, req.prompt, slot, max_new=self.clamp_max_new(req)
+        )
+        self._out[slot] = [tok0]
+
+    def can_admit(self, req) -> bool:
+        return self.pool.can_admit(
+            np.asarray(req.prompt, np.int32), self.clamp_max_new(req)
+        )
+
+    def release(self, slot: int) -> None:
+        self.pool.release_slot(slot)
+
+    @property
+    def prefix_saved_blocks(self) -> int:
+        return self.pool.prefix_saved_blocks
 
 
 class FixedPointWorkload:
@@ -182,6 +229,18 @@ class FixedPointWorkload:
 @register_workload("llm_decode")
 def llm_decode(**kwargs) -> LLMDecodeWorkload:
     return LLMDecodeWorkload(**kwargs)
+
+
+@register_workload("llm_decode_paged")
+def llm_decode_paged(**kwargs) -> PagedLLMWorkload:
+    """Block-paged LLM decode (``serving/paged.py``, DESIGN.md S14).
+
+    Extra kwargs forwarded to :class:`PagedDecodePool`: ``block_size``,
+    ``num_blocks`` (the cache *byte* budget, default = contiguous-capacity
+    parity), ``share_prefixes``, ``attn`` ('gather' bit-exact | 'pallas'
+    paged-kernel).
+    """
+    return PagedLLMWorkload(**kwargs)
 
 
 @register_workload("fixedpoint_solve")
