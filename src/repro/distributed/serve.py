@@ -501,3 +501,56 @@ def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
             return transformer._logits(params, x, cfg)[:, 0]
 
     return prefill_step, rules
+
+
+# ---------------------------------------------------------------------------
+# Elastic serving: bit-exact state transfer to joining replicas (S15)
+# ---------------------------------------------------------------------------
+
+
+_BCAST_JIT: dict = {}
+
+
+def mrd_broadcast_stacked(tree, p: int, src: int = 0, dst: int = None):
+    """Simulated-replica analogue of ``runtime.elastic.mrd_broadcast``.
+
+    The serving engine's termination agreement runs over *stacked* replicas
+    (sim-executor MRD plans over a leading ``[p]`` axis), so the grow path's
+    state transfer is the same protocol move at the same extent: rank
+    ``src`` contributes the real leaves, every other rank contributes exact
+    zeros, and the MRD **sum**-allreduce makes ``x + 0`` bit-exact at every
+    stage — the value landing on the joiner (``dst``, default the last,
+    newly appended rank) equals the source's bit for bit.  Bool leaves ride
+    as uint8; zero-size leaves pass through untouched.  Returns the tree as
+    received by ``dst``.
+
+    The whole tree moves through **one** jitted program (cached per
+    ``(p, src, dst, structure, shapes)``): a per-leaf eager loop dispatches
+    thousands of stage-sized ops for a full model tree, which would
+    dominate a live grow.
+    """
+    from repro.collectives import plans as _plans
+
+    if dst is None:
+        dst = p - 1
+    if p == 1:
+        return jax.tree.map(jnp.asarray, tree)
+    leaves, treedef = jax.tree.flatten(tree)
+    leaves = [jnp.asarray(l) for l in leaves]
+    key = (p, src, dst, treedef,
+           tuple((l.shape, str(l.dtype)) for l in leaves))
+    fn = _BCAST_JIT.get(key)
+    if fn is None:
+        plan = _plans.allreduce_plan(schedule="mrd", p=p, op="sum")
+
+        def one(leaf):
+            if leaf.size == 0:
+                return leaf
+            as_bool = leaf.dtype == jnp.bool_
+            x = leaf.astype(jnp.uint8) if as_bool else leaf
+            stacked = jnp.zeros((p,) + x.shape, x.dtype).at[src].set(x)
+            out = plan.run(stacked)[dst]
+            return out.astype(jnp.bool_) if as_bool else out
+
+        fn = _BCAST_JIT[key] = jax.jit(lambda ls: [one(l) for l in ls])
+    return jax.tree.unflatten(treedef, fn(leaves))

@@ -22,6 +22,14 @@ Continuous batching via the ``repro.serving`` subsystem (DESIGN.md S13):
   PYTHONPATH=src python -m repro.launch.serve --continuous \\
       --workload fixedpoint_solve --termination residual_interval \\
       --requests 8 --dp 3 --gen 400
+
+Elastic serving (DESIGN.md S15): kill/join termination-agreement replicas
+under live traffic — no request lost, no slot re-prefilled:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \\
+      --continuous --slots 4 --requests 16 --arrival poisson:0.5 \\
+      --dp 4 --elastic-policy grow_on_join --steps-per-dispatch 4 \\
+      --kill 6:2 --join 16:4,5 --kill 26:0
 """
 
 from __future__ import annotations
@@ -67,6 +75,43 @@ def _arrival_ticks(spec: str, n: int, seed: int) -> list[int]:
             raise SystemExit(f"trace {arg} has {len(ticks)} arrivals, need {n}")
         return [int(t) for t in ticks[:n]]
     raise SystemExit(f"unknown --arrival {spec!r} (none | poisson:R | trace:FILE)")
+
+
+class _CliChaosScript:
+    """Chaos events parsed from ``--kill/--join/--stall/--unstall`` flags,
+    fired against the :class:`repro.runtime.ElasticServeController` on its
+    tick clock (same ``apply_due`` contract as ``tests/chaos.py``)."""
+
+    def __init__(self, events):
+        self.events = sorted(events, key=lambda e: e[0])
+        self.fired = 0
+
+    def apply_due(self, ctl, tick: int):
+        while self.fired < len(self.events) and self.events[self.fired][0] <= tick:
+            t, name, a, kw = self.events[self.fired]
+            print(f"# chaos @tick {tick}: {name}{a}")
+            getattr(ctl, name)(*a, **kw)
+            self.fired += 1
+
+
+def _parse_chaos(args) -> _CliChaosScript | None:
+    events = []
+    for spec in args.kill or []:
+        parts = spec.split(":")
+        events.append((int(parts[0]), "kill", (int(parts[1]),),
+                       {"silent": len(parts) > 2 and parts[2] == "silent"}))
+    for spec in args.join or []:
+        tick, _, ids = spec.partition(":")
+        events.append((int(tick), "join",
+                       (tuple(int(i) for i in ids.split(",")),), {}))
+    for spec in args.stall or []:
+        parts = spec.split(":")
+        factor = float(parts[2]) if len(parts) > 2 else 10.0
+        events.append((int(parts[0]), "stall", (int(parts[1]), factor), {}))
+    for spec in args.unstall or []:
+        tick, _, rid = spec.partition(":")
+        events.append((int(tick), "unstall", (int(rid),), {}))
+    return _CliChaosScript(events) if events else None
 
 
 def _static_main(args, cfg, mesh):
@@ -165,9 +210,23 @@ def _continuous_main(args, cfg, mesh):
 
     eng = ServeEngine(wl, ServeConfig(
         scheduler=args.scheduler, termination=termination,
-        dp=args.dp, eps=args.eps,
+        dp=args.dp, eps=args.eps, max_retries=args.max_retries,
+        steps_per_dispatch=args.steps_per_dispatch,
     ))
-    res = eng.run(reqs)
+    script = _parse_chaos(args)
+    if args.elastic_policy or script is not None:
+        from repro.runtime import ElasticServeController
+
+        ctl = ElasticServeController(
+            eng, policy=args.elastic_policy or "grow_on_join",
+            min_extent=args.min_extent,
+        )
+        res = ctl.run(reqs, events=script)
+        for ev in ctl.resizes:
+            print(f"# resize: {ev.kind} {ev.old_dp} -> {ev.new_dp} "
+                  f"@tick {ev.step} ({ev.reason})")
+    else:
+        res = eng.run(reqs)
     s = eng.summary()
     print(f"{args.workload} x {args.scheduler} x {termination} (dp={args.dp}): "
           f"{s['completed']} requests in {s['ticks']} ticks / {s['wall_s']:.2f} s")
@@ -175,6 +234,9 @@ def _continuous_main(args, cfg, mesh):
           f"{s['occupancy']:.2f} | converged {s['converged']}/{s['completed']}")
     print(f"  TTFT p50/p95 {s['ttft_p50_ms']:.1f}/{s['ttft_p95_ms']:.1f} ms | "
           f"TPOT p50/p95 {s['tpot_p50_ms']:.2f}/{s['tpot_p95_ms']:.2f} ms")
+    if s["resizes"] or s["retried"]:
+        print(f"  resizes {s['resizes']} | capacity retries {s['retried']} "
+              f"| final dp {eng.dp}")
     if hasattr(wl, "cache_bytes"):
         extra = (f" | prefix blocks saved {wl.prefix_saved_blocks}"
                  if hasattr(wl, "prefix_saved_blocks") else "")
@@ -220,6 +282,27 @@ def main(argv=None):
                     help="fixedpoint_solve: SOLVERS entry (affine payload)")
     ap.add_argument("--n", type=int, default=64, help="fixedpoint problem size")
     ap.add_argument("--eps", type=float, default=1e-6)
+    ap.add_argument("--steps-per-dispatch", type=int, default=16,
+                    help="ticks per fused device dispatch; chaos events "
+                         "fire at dispatch boundaries, so a finer value "
+                         "lands --kill/--join closer to their nominal "
+                         "ticks")
+    ap.add_argument("--max-retries", type=int, default=0,
+                    help="requeues granted to capacity-forced requests")
+    # elastic serving (DESIGN.md S15): resize the agreement extent live
+    ap.add_argument("--elastic-policy", default=None,
+                    help="drive the engine through an ElasticServeController "
+                         "(ELASTIC_POLICIES entry, e.g. grow_on_join)")
+    ap.add_argument("--min-extent", type=int, default=1,
+                    help="never shrink below this many replicas")
+    ap.add_argument("--kill", action="append", metavar="TICK:REPLICA[:silent]",
+                    help="kill a replica at TICK (repeatable); ':silent' "
+                         "waits for the virtual heartbeat timeout")
+    ap.add_argument("--join", action="append", metavar="TICK:ID[,ID...]",
+                    help="replicas ask to join at TICK (repeatable)")
+    ap.add_argument("--stall", action="append", metavar="TICK:REPLICA[:FACTOR]",
+                    help="slow a replica's heartbeat step time (repeatable)")
+    ap.add_argument("--unstall", action="append", metavar="TICK:REPLICA")
     args = ap.parse_args(argv)
 
     needs_model = not (args.continuous and args.workload == "fixedpoint_solve")
@@ -233,7 +316,11 @@ def main(argv=None):
         )
         if cfg.is_encoder_only:
             raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
-    mesh = build_mesh(args.dp, args.tp) if needs_model else None
+    # continuous serving simulates the --dp agreement replicas (stacked
+    # termination contributions), so the device mesh only needs the TP
+    # extent; the static path shards the batch over real dp devices
+    mesh_dp = 1 if args.continuous else args.dp
+    mesh = build_mesh(mesh_dp, args.tp) if needs_model else None
 
     if args.continuous:
         _continuous_main(args, cfg, mesh)

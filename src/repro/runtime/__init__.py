@@ -4,6 +4,7 @@ by name, extend with ``@register_policy``."""
 
 from repro.runtime.elastic import (  # noqa: F401
     ElasticConfig,
+    ElasticServeController,
     ElasticTrainer,
     ResizeEvent,
     mrd_broadcast,
@@ -11,6 +12,7 @@ from repro.runtime.elastic import (  # noqa: F401
 from repro.runtime.fault_tolerance import (  # noqa: F401
     FailureDetector,
     HeartbeatConfig,
+    ReplicaSet,
     StepClock,
     grow_mesh,
     shrink_mesh,
@@ -19,6 +21,7 @@ from repro.runtime.policies import (  # noqa: F401
     ELASTIC_POLICIES,
     ResizeDecision,
     available,
+    clamp_min_extent,
     get_policy,
     register_policy,
 )

@@ -51,11 +51,12 @@ from repro.collectives import plans
 from repro.runtime.fault_tolerance import (
     FailureDetector,
     HeartbeatConfig,
+    ReplicaSet,
     StepClock,
     grow_mesh,
     shrink_mesh,
 )
-from repro.runtime.policies import ResizeDecision, get_policy
+from repro.runtime.policies import ResizeDecision, clamp_min_extent, get_policy
 
 
 def _dp_axes(mesh) -> tuple[str, ...]:
@@ -150,6 +151,166 @@ def flat_keep_for_grow(old_mesh, dp_axes, axis: str, n_new: int):
         else:
             keep.append(int(np.ravel_multi_index(idx, sizes_o)))
     return tuple(keep)
+
+
+class ElasticServeController:
+    """Drive a :class:`repro.serving.ServeEngine` across replica changes —
+    the serving analogue of :class:`ElasticTrainer` (DESIGN.md S15).
+
+    Same harness surface (``kill`` / ``stall`` / ``unstall`` / ``join`` —
+    chaos scripts fire against it unchanged), same policy/detector wiring
+    on the injected :class:`StepClock`, but the "workers" are the engine's
+    *simulated* termination-agreement replicas: a resize produces a
+    :class:`ReplicaSet` keep map and calls :meth:`ServeEngine.resize`
+    instead of resharding a device mesh.  Unlike training, serving never
+    aborts on total failure — :func:`clamp_min_extent` pins the pool at
+    ``min_extent`` replicas and spared replicas are pressed back into
+    service until joiners restore headroom.
+
+    One controller step = one policy pass + one engine step (which runs up
+    to ``steps_per_dispatch`` device ticks); chaos events are matched
+    against the engine's *tick* clock via ``apply_due``, so an event due at
+    an intermediate tick of a fused dispatch fires at the next dispatch
+    boundary — the first point a real control plane could act."""
+
+    def __init__(
+        self,
+        engine,
+        policy: str = "grow_on_join",
+        *,
+        heartbeat: Optional[HeartbeatConfig] = None,
+        clock: Optional[StepClock] = None,
+        replica_ids: Optional[Sequence[int]] = None,
+        min_extent: int = 1,
+        base_step_time: float = 1.0,
+        max_resizes: int = 32,
+    ):
+        self.engine = engine
+        ids = (
+            list(replica_ids) if replica_ids is not None
+            else list(range(engine.dp))
+        )
+        if len(ids) != engine.dp:
+            raise ValueError(
+                f"{len(ids)} replica ids for a dp={engine.dp} engine"
+            )
+        self.replicas = ReplicaSet(ids)
+        self.policy = get_policy(policy)
+        self.clock = clock or StepClock()
+        self.detector = FailureDetector(
+            ids, heartbeat or HeartbeatConfig(), now=self.clock.now()
+        )
+        self.min_extent = min_extent
+        self.base_step_time = base_step_time
+        self.max_resizes = max_resizes
+        self.health: dict[int, str] = {r: "ok" for r in ids}
+        self.stall_factor: dict[int, float] = {}
+        self.pending_joins: list[int] = []
+
+    # -- harness surface (chaos scripts poke these, same as ElasticTrainer) --
+
+    def kill(self, replica_id: int, *, silent: bool = False):
+        self.health[replica_id] = "dead"
+        if not silent:
+            self.detector.mark_dead(replica_id)
+
+    def stall(self, replica_id: int, factor: float = 10.0):
+        self.health[replica_id] = "stalled"
+        self.stall_factor[replica_id] = factor
+
+    def unstall(self, replica_id: int):
+        if self.health.get(replica_id) == "stalled":
+            self.health[replica_id] = "ok"
+        self.stall_factor.pop(replica_id, None)
+
+    def join(self, replica_ids: Sequence[int]):
+        for r in replica_ids:
+            if r not in self.pending_joins and r not in self.replicas.ids:
+                self.pending_joins.append(r)
+                self.health[r] = "ok"
+
+    def _heartbeat_all(self, now: float):
+        for r in self.replicas.ids:
+            status = self.health.get(r, "ok")
+            if status == "dead":
+                continue
+            step_time = self.base_step_time * (
+                self.stall_factor.get(r, 1.0) if status == "stalled" else 1.0
+            )
+            self.detector.heartbeat(r, now=now, step_time=step_time)
+
+    # -- one controller step -------------------------------------------------
+
+    def step(self, events=None) -> np.ndarray:
+        """One policy pass + one engine step.  Returns the retired mask."""
+        now = self.clock.advance()
+        if events is not None:
+            fire = getattr(events, "apply_due", None) or events.apply
+            fire(self, self.engine.tick)
+        self._heartbeat_all(now)
+        decision = self.policy.decide(
+            self.detector, now, self.pending_joins,
+            frozenset(self.replicas.ids),
+        )
+        clamped = clamp_min_extent(
+            decision, self.replicas.ids, self.min_extent
+        )
+        if decision.action == "shrink" and clamped is not decision:
+            # spared replicas are pressed back into service: clear their
+            # failure evidence or the suppressed shrink re-fires forever
+            # and blocks join admission
+            for r in decision.remove - clamped.remove:
+                self.health[r] = "ok"
+                self.detector.heartbeat(r, now=now)
+        decision = clamped
+        if decision.action == "abort":
+            raise RuntimeError(f"elastic policy abort: {decision.reason}")
+        if decision.action == "shrink":
+            if len(self.resizes) >= self.max_resizes:
+                raise RuntimeError("resize budget exhausted")
+            for r in decision.remove:
+                self.detector.remove_worker(r)
+                self.health[r] = "dead"
+            _, keep = self.replicas.remove(decision.remove)
+            self.engine.resize(
+                self.replicas.dp, keep, reason=decision.reason
+            )
+        elif decision.action == "grow":
+            if len(self.resizes) >= self.max_resizes:
+                raise RuntimeError("resize budget exhausted")
+            joiners = tuple(decision.admit)
+            self.pending_joins = [
+                r for r in self.pending_joins if r not in set(joiners)
+            ]
+            for r in joiners:
+                self.detector.add_worker(r, now)
+            _, keep = self.replicas.add(joiners)
+            self.engine.resize(
+                self.replicas.dp, keep, reason=decision.reason
+            )
+        return self.engine.step()
+
+    @property
+    def resizes(self) -> list[ResizeEvent]:
+        return self.engine.resizes
+
+    def run(self, requests=None, *, events=None, max_steps: Optional[int] = None):
+        """Submit ``requests`` and step the engine under the policy until
+        everything retires (the serving analogue of ``ElasticTrainer.run``,
+        with chaos ``events`` applied on the engine's tick clock)."""
+        eng = self.engine
+        for r in requests or []:
+            eng.submit(r)
+        budget = max_steps or eng.cfg.max_ticks
+        steps = 0
+        while eng.queue or eng.pending or any(eng.slot_req):
+            if steps >= budget:
+                raise RuntimeError(
+                    f"elastic serve loop did not drain within {budget} steps"
+                )
+            self.step(events)
+            steps += 1
+        return eng.results
 
 
 class ElasticTrainer:

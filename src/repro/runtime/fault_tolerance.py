@@ -146,6 +146,44 @@ def grow_mesh(mesh, joining_device_ids, dp_axis: str = "data"):
     return new_mesh, new_slices.shape[0]
 
 
+class ReplicaSet:
+    """Ordered live replica ids for a *simulated* DP extent (DESIGN.md S15).
+
+    The serving engine's termination agreement runs over stacked replicas
+    rather than mesh devices, so resizes need keep maps but no device grid:
+    this is the 1-D analogue of ``flat_keep_for_shrink`` /
+    ``flat_keep_for_grow``.  ``keep[i]`` = old rank now at new rank ``i``
+    (None = joiner) — the exact contract the protocol ``migrate`` hooks and
+    ``ServeEngine.resize`` consume."""
+
+    def __init__(self, ids):
+        self.ids = list(ids)
+        if len(set(self.ids)) != len(self.ids):
+            raise ValueError(f"duplicate replica ids: {self.ids}")
+
+    @property
+    def dp(self) -> int:
+        return len(self.ids)
+
+    def remove(self, dead) -> tuple:
+        """Drop ``dead`` ids; survivors keep their order.  Returns
+        ``(new_ids, keep)``."""
+        dead = set(dead)
+        keep = tuple(i for i, r in enumerate(self.ids) if r not in dead)
+        if not keep:
+            raise RuntimeError("no live replicas left")
+        self.ids = [self.ids[i] for i in keep]
+        return tuple(self.ids), keep
+
+    def add(self, joiners) -> tuple:
+        """Append ``joiners`` as new trailing ranks.  Returns
+        ``(new_ids, keep)`` with None marking each joiner."""
+        joiners = [j for j in joiners if j not in self.ids]
+        keep = tuple(range(len(self.ids))) + (None,) * len(joiners)
+        self.ids = self.ids + joiners
+        return tuple(self.ids), keep
+
+
 class StepClock:
     """Deterministic virtual clock: advances ``dt`` seconds per train step.
 

@@ -71,6 +71,34 @@ def available() -> list[str]:
     return sorted(ELASTIC_POLICIES)
 
 
+def clamp_min_extent(
+    decision: ResizeDecision, live_ids, min_extent: int = 1
+) -> ResizeDecision:
+    """Serving guard: never shrink below ``min_extent`` replicas.
+
+    A chaos script (or a real cascading failure) may remove every replica;
+    training can abort and restore a checkpoint, but a serving pool must
+    keep answering — so the lowest-id victims are spared until
+    ``min_extent`` survivors remain.  Spared replicas stay in the mesh and
+    keep being reported dead by the detector; they are dropped by a later
+    decision once joiners restore headroom."""
+    if decision.action != "shrink":
+        return decision
+    survivors = [w for w in live_ids if w not in decision.remove]
+    if len(survivors) >= min_extent:
+        return decision
+    spared = sorted(decision.remove)[: min_extent - len(survivors)]
+    remove = frozenset(w for w in decision.remove if w not in spared)
+    if not remove:
+        return ResizeDecision(
+            reason=f"shrink suppressed: min extent {min_extent}"
+        )
+    return dataclasses.replace(
+        decision, remove=remove,
+        reason=f"{decision.reason} (clamped to min extent {min_extent})",
+    )
+
+
 class ElasticPolicy:
     """Base: no failures tolerated, no growth."""
 

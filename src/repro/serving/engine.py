@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.asynchrony.protocols import RES_INIT
+from repro.runtime.elastic import ResizeEvent
 from repro.serving.schedulers import get_scheduler
 from repro.serving.termination import (
     TerminationConfig,
@@ -65,6 +66,7 @@ class RequestResult:
     converged: bool  # False only for budget-forced fixed-point retirement
     ttft_s: float
     tpot_s: float
+    retries: int = 0  # capacity-forced requeues this request went through
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +78,9 @@ class ServeConfig:
     window: int = 0  # residual_interval: 0 -> one agreement cycle + 1
     max_admit_per_tick: int = 0  # 0 = fill every free slot
     max_ticks: int = 100_000
+    # capacity-forced requests (forced_at_capacity) get this many requeues
+    # before retiring converged=False — 0 keeps the old fail-fast behavior
+    max_retries: int = 0
     # ticks per fused dispatch: the device loop early-exits on the first
     # retiring tick (so retirement -> admission latency is one dispatch)
     # and the host caps it at the next pending arrival, so larger values
@@ -95,20 +100,65 @@ class ServeEngine:
         self.workload = workload
         self.cfg = cfg
         self.slots = workload.slots
+        self.dp = cfg.dp  # live replica extent (resize() changes it)
+        # a dp-sharded workload (fixed-point pools) must agree with the
+        # engine's extent — align it, as resize() does, so a workload that
+        # served at another extent can be re-engined at any dp
+        mig = getattr(workload, "migrate_dp", None)
+        if mig is not None and getattr(workload, "dp", cfg.dp) != cfg.dp:
+            mig(cfg.dp)
+        # canonicalize the workload's device state: a fresh __init__ hands
+        # the first dispatch mesh-committed leaves while a reset() hands it
+        # uncommitted ones, and jit propagates that difference through every
+        # downstream signature — forking the executable cache per history
+        workload.params = self._commit(workload.params)
+        workload.wstate = self._commit(workload.wstate)
         self.scheduler = get_scheduler(cfg.scheduler)
         self.term = get_termination(cfg.termination)
-        self.tcfg = TerminationConfig(
-            dp=cfg.dp, eps=cfg.eps, window=cfg.window
-        )
-        self.tstate = self.term.init(self.tcfg, self.slots)
+        self._build_fused()
+        self.tstate = self._commit(self.term.init(self.tcfg, self.slots))
+        self._ctrl = None  # device control block (pushed when host-dirty)
+        self._ctrl_dirty = True
 
-        # One jitted dispatch per tick: pool step + signal assembly +
-        # termination tick + budget force-retire + slot deactivation, all
-        # fused — the engine's host loop only syncs the tiny retire/token
-        # vectors, which is what keeps continuous batching ahead of the
-        # static baseline at small per-step costs.
+        self.tick = 0
+        self.queue: List[Request] = []
+        self.pending: List[Request] = []  # submitted, not yet arrived
+        self.slot_req: List[Optional[Request]] = [None] * self.slots
+        self.results: Dict[int, RequestResult] = {}
+        self.resizes: List[ResizeEvent] = []
+        # per-slot host mirrors of the device control block
+        self._active = np.zeros((self.slots,), bool)
+        self._admit_tick = np.zeros((self.slots,), np.int32)
+        self._new_tokens = np.zeros((self.slots,), np.int32)
+        self._max_new = np.ones((self.slots,), np.int32)
+        self._eos = np.full((self.slots,), -1, np.int32)
+        self._eps = np.full((self.slots,), cfg.eps, np.float32)
+        self._t_queue = np.zeros((self.slots,), np.float64)
+        self._t_first = np.zeros((self.slots,), np.float64)
+        # metrics accumulators
+        self._occupancy_ticks = 0
+        self._occupancy_sum = 0.0
+        self._forced_at_capacity = 0
+        self._retried = 0
+        self._t_start: Optional[float] = None
+        self._t_last = 0.0
+
+    def _build_fused(self):
+        """(Re)build the fused per-tick dispatch at the current replica
+        extent ``self.dp`` — called at construction and by :meth:`resize`.
+
+        One jitted dispatch per tick: pool step + signal assembly +
+        termination tick + budget force-retire + slot deactivation, all
+        fused — the engine's host loop only syncs the tiny retire/token
+        vectors, which is what keeps continuous batching ahead of the
+        static baseline at small per-step costs.
+        """
+        cfg, workload = self.cfg, self.workload
+        self.tcfg = TerminationConfig(
+            dp=self.dp, eps=cfg.eps, window=cfg.window
+        )
         certifying = cfg.termination.startswith("residual")
-        dp, slots = cfg.dp, self.slots
+        dp, slots = self.dp, self.slots
         term, tcfg = self.term, self.tcfg
         cap_fn = getattr(workload, "capacity_mask", None)
 
@@ -191,7 +241,9 @@ class ServeEngine:
             return jax.lax.while_loop(cond, body, init)
 
         # compile once per (workload, termination config): engines over the
-        # same workload (bench re-runs, resets) reuse the compiled tick
+        # same workload (bench re-runs, resets, revisited elastic extents)
+        # reuse the compiled tick — the key includes dp via tcfg, so each
+        # extent compiles exactly once per workload
         cache = getattr(workload, "_fused_cache", None)
         if cache is None:
             cache = workload._fused_cache = {}
@@ -199,30 +251,6 @@ class ServeEngine:
         if key not in cache:
             cache[key] = jax.jit(_fused_loop)
         self._jfused = cache[key]
-        self.tstate = self._commit(self.tstate)
-        self._ctrl = None  # device control block (pushed when host-dirty)
-        self._ctrl_dirty = True
-
-        self.tick = 0
-        self.queue: List[Request] = []
-        self.pending: List[Request] = []  # submitted, not yet arrived
-        self.slot_req: List[Optional[Request]] = [None] * self.slots
-        self.results: Dict[int, RequestResult] = {}
-        # per-slot host mirrors of the device control block
-        self._active = np.zeros((self.slots,), bool)
-        self._admit_tick = np.zeros((self.slots,), np.int32)
-        self._new_tokens = np.zeros((self.slots,), np.int32)
-        self._max_new = np.ones((self.slots,), np.int32)
-        self._eos = np.full((self.slots,), -1, np.int32)
-        self._eps = np.full((self.slots,), cfg.eps, np.float32)
-        self._t_queue = np.zeros((self.slots,), np.float64)
-        self._t_first = np.zeros((self.slots,), np.float64)
-        # metrics accumulators
-        self._occupancy_ticks = 0
-        self._occupancy_sum = 0.0
-        self._forced_at_capacity = 0
-        self._t_start: Optional[float] = None
-        self._t_last = 0.0
 
     # -- request intake -----------------------------------------------------
 
@@ -255,6 +283,111 @@ class ServeEngine:
 
         sh = NamedSharding(mesh, PartitionSpec())
         return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+    # -- elastic resize (DESIGN.md S15) --------------------------------------
+
+    def resize(self, new_dp: int, keep, *, reason: str = ""):
+        """Change the termination-agreement replica extent under live
+        traffic — no request is lost, no slot re-prefills.
+
+        ``keep[i]`` is the old replica rank now at new rank ``i`` (None =
+        a joiner).  On **shrink**, survivors re-agree in-flight slot state
+        through the protocol ``migrate`` hooks: certified latches and
+        per-replica interval windows survive, the staged MRD reduction
+        restarts at the new (typically non-power-of-two) extent, and the
+        re-latched cycle guard keeps every pre-resize admission retirable.
+        On **grow**, the joiner receives params, KV/state cache, pool
+        control state, and (paged pools) block tables + allocator
+        refcounts/prefix registry through the bit-exact
+        :func:`repro.distributed.serve.mrd_broadcast_stacked` path at the
+        new extent.  Returns the recorded :class:`ResizeEvent` (or None
+        for a no-op resize).
+        """
+        keep = tuple(keep)
+        if new_dp < 1 or len(keep) != new_dp:
+            raise ValueError(f"keep map {keep} does not cover dp={new_dp}")
+        old_dp = self.dp
+        for k in keep:
+            if k is not None and not 0 <= k < old_dp:
+                raise ValueError(f"keep entry {k} outside old extent {old_dp}")
+        if new_dp == old_dp and keep == tuple(range(old_dp)):
+            return None
+        kind = "grow" if any(k is None for k in keep) else "shrink"
+
+        mig = getattr(self.workload, "migrate_dp", None)
+        if mig is not None:
+            mig(new_dp)
+        old_tstate = self.tstate
+        self.dp = new_dp
+        self._build_fused()  # new tcfg -> new jit cache entry per extent
+        self.tstate = self._commit(
+            self.term.migrate(old_tstate, keep, self.tcfg, self.slots)
+        )
+        if kind == "grow":
+            self._broadcast_to_joiners()
+        ev = ResizeEvent(
+            kind=kind, step=self.tick, old_dp=old_dp, new_dp=new_dp,
+            keep=keep, device_ids=(), reason=reason,
+        )
+        self.resizes.append(ev)
+        return ev
+
+    def _broadcast_to_joiners(self):
+        """Route the full serving state through the MRD sum-broadcast at
+        the new extent and install the *joiner's* copy — the protocol-level
+        transfer a joining replica performs instead of a cold start.  The
+        broadcast is bit-exact (non-source ranks contribute true zeros), so
+        survivors' state is unchanged and the joiner decodes bit-identical
+        tokens from its first tick; every leaf's committed sharding is
+        restored so the fused tick stays at one compilation per extent.
+        """
+        from repro.distributed import serve as dserve
+
+        tree = {
+            "params": self.workload.params,
+            "wstate": self.workload.wstate,
+            "tstate": self.tstate,
+        }
+        if self._ctrl is not None and not self._ctrl_dirty:
+            tree["ctrl"] = self._ctrl
+        exp = getattr(self.workload, "export_state", None)
+        if exp is not None:
+            tree["host"] = exp()
+        leaves, treedef = jax.tree.flatten(tree)
+        shardings = [
+            leaf.sharding if isinstance(leaf, jax.Array) else None
+            for leaf in leaves
+        ]
+        out = dserve.mrd_broadcast_stacked(leaves, self.dp, src=0)
+        out = [
+            jax.device_put(o, s) if s is not None else np.asarray(o)
+            for o, s in zip(out, shardings)
+        ]
+        tree = jax.tree.unflatten(treedef, out)
+        self.workload.params = tree["params"]
+        self.workload.wstate = tree["wstate"]
+        self.tstate = tree["tstate"]
+        if "ctrl" in tree:
+            self._ctrl = tree["ctrl"]
+        if "host" in tree:
+            self.workload.import_state(tree["host"])
+
+    def _abort_inflight(self):
+        """A crashed fused dispatch must not leak cache blocks or strand
+        requests: every in-flight slot's blocks are rolled back to the
+        allocator and its request returns to the queue for a clean
+        re-admission (the tick never happened as far as the request is
+        concerned)."""
+        rel = getattr(self.workload, "release", None)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if rel is not None:
+                rel(slot)
+            self.slot_req[slot] = None
+            self._active[slot] = False
+            self.queue.append(req)
+        self._ctrl_dirty = True
 
     # -- one tick -----------------------------------------------------------
 
@@ -328,10 +461,14 @@ class ServeEngine:
             klim = max(1, min(klim, nxt - now))
         if self.cfg.max_admit_per_tick and self.queue and self._free_slots():
             klim = 1  # rate-limited admissions resume next tick
-        final = self._jfused(
-            self.workload.params, self.workload.wstate, self.tstate,
-            self._ctrl, jnp.int32(now), jnp.int32(klim),
-        )
+        try:
+            final = self._jfused(
+                self.workload.params, self.workload.wstate, self.tstate,
+                self._ctrl, jnp.int32(now), jnp.int32(klim),
+            )
+        except Exception:
+            self._abort_inflight()
+            raise
         self.workload.wstate = final["wstate"]
         self.tstate = final["tstate"]
         self._ctrl = final["ctrl"]
@@ -369,9 +506,22 @@ class ServeEngine:
 
     def _collect(self, slot, now, certified, was_forced, t_done,
                  at_capacity=False):
+        req = self.slot_req[slot]
         if at_capacity:
             self._forced_at_capacity += 1
-        req = self.slot_req[slot]
+            if getattr(req, "_retries", 0) < self.cfg.max_retries:
+                # bounded requeue: the request frozen at capacity gets a
+                # fresh admission (and a fresh block reservation) instead
+                # of silently retiring converged=False
+                req._retries = getattr(req, "_retries", 0) + 1
+                self._retried += 1
+                self.slot_req[slot] = None
+                rel = getattr(self.workload, "release", None)
+                if rel is not None:
+                    rel(slot)
+                req.arrival = self.tick
+                self.queue.append(req)
+                return
         out = self.workload.output(slot)
         n_tok = int(self._new_tokens[slot])
         if req.prompt is not None:  # llm: trim to EOS / budget
@@ -392,6 +542,7 @@ class ServeEngine:
             admit_tick=int(self._admit_tick[slot]), retire_tick=now,
             n_tokens=n_tok, certified=cert,
             converged=not was_forced, ttft_s=ttft, tpot_s=tpot,
+            retries=getattr(req, "_retries", 0),
         )
         self.slot_req[slot] = None
         rel = getattr(self.workload, "release", None)
@@ -443,4 +594,6 @@ class ServeEngine:
             ),
             "converged": int(sum(r.converged for r in res)),
             "forced_at_capacity": self._forced_at_capacity,
+            "retried": self._retried,
+            "resizes": len(self.resizes),
         }

@@ -139,6 +139,47 @@ class BlockAllocator:
         self.release(bid)
         return nb, True
 
+    # -- elastic resize (DESIGN.md S15) --------------------------------------
+
+    def export_arrays(self) -> Dict[str, np.ndarray]:
+        """Allocator state as flat int arrays — the broadcastable form a
+        joining replica adopts.  The free list is exported *in order* (pop
+        order determines future block layouts, so a joiner must replay it
+        exactly); the prefix registry is packed as concatenated key bytes +
+        per-key lengths + block ids, sorted by key for determinism.  All
+        ids are int32 (x64 is off; int64 leaves would be silently coerced).
+        """
+        keys = sorted(self._block_of.items())
+        return {
+            "ref": self.ref.astype(np.int32),
+            "free": np.asarray(self._free, np.int32),
+            "key_bytes": np.frombuffer(
+                b"".join(k for k, _ in keys), np.uint8
+            ).copy(),
+            "key_lens": np.asarray([len(k) for k, _ in keys], np.int32),
+            "key_blocks": np.asarray([b for _, b in keys], np.int32),
+        }
+
+    @classmethod
+    def from_arrays(
+        cls, arrays: Dict[str, np.ndarray], num_blocks: int, block_size: int
+    ) -> "BlockAllocator":
+        """Rebuild an allocator from :meth:`export_arrays` output."""
+        a = cls(num_blocks, block_size)
+        a.ref = np.asarray(arrays["ref"]).astype(np.int64).copy()
+        a._free = [int(b) for b in np.asarray(arrays["free"])]
+        packed = np.asarray(arrays["key_bytes"], np.uint8).tobytes()
+        off = 0
+        for ln, bid in zip(
+            np.asarray(arrays["key_lens"]), np.asarray(arrays["key_blocks"])
+        ):
+            key = packed[off : off + int(ln)]
+            off += int(ln)
+            a._block_of[key] = int(bid)
+            a._key_of[int(bid)] = key
+        a.check()
+        return a
+
     def check(self) -> None:
         """Assert the allocator invariants (test hook)."""
         free = set(self._free)
@@ -370,6 +411,37 @@ class PagedDecodePool:
         for b in self.slot_blocks[slot]:
             self.allocator.release(b)
         self.slot_blocks[slot] = []
+
+    # -- elastic resize (DESIGN.md S15) --------------------------------------
+
+    def export_state(self) -> Dict[str, np.ndarray]:
+        """Host-side pool control state as flat arrays (broadcastable to a
+        joining replica next to the device state): allocator refcounts +
+        free-list order + prefix registry, and the per-slot block lists
+        packed as (flat ids, per-slot lengths)."""
+        flat = [b for bl in self.slot_blocks for b in bl]
+        return {
+            "allocator": self.allocator.export_arrays(),
+            "slot_blocks": np.asarray(flat, np.int32),
+            "slot_lens": np.asarray(
+                [len(bl) for bl in self.slot_blocks], np.int32
+            ),
+            "prefix_saved": np.asarray(self.prefix_saved_blocks, np.int32),
+        }
+
+    def import_state(self, st: Dict[str, np.ndarray]) -> None:
+        """Adopt a broadcast :meth:`export_state` tree (the joiner's half
+        of a grow — the device ``state`` arrives separately)."""
+        self.allocator = BlockAllocator.from_arrays(
+            st["allocator"], self.num_blocks, self.block_size
+        )
+        flat = [int(b) for b in np.asarray(st["slot_blocks"])]
+        out, off = [], 0
+        for ln in np.asarray(st["slot_lens"]):
+            out.append(flat[off : off + int(ln)])
+            off += int(ln)
+        self.slot_blocks = out
+        self.prefix_saved_blocks = int(st["prefix_saved"])
 
     # -- introspection -------------------------------------------------------
 

@@ -170,18 +170,7 @@ class FixedPointPool:
             return base.full_map(x) + gain * (v - v0)
 
         self.param_map = param_map
-        m = self.n // dp
-
-        def _step(state, active):
-            xnew = jax.vmap(param_map)(state["x"], state["payload"])
-            upd = jnp.max(
-                jnp.abs(xnew - state["x"]).reshape(self.slots, dp, m), axis=2
-            )  # [S, dp]
-            x = jnp.where(active[:, None], xnew, state["x"])
-            residual = jnp.where(active[:, None], upd, RES_INIT).T  # [dp, S]
-            return {**state, "x": x}, residual
-
-        self.device_step = _step
+        self._build_step()
 
         def _admit(state, v, slot):
             return {
@@ -191,6 +180,34 @@ class FixedPointPool:
 
         self._jadmit = jax.jit(_admit)
         self.reset()
+
+    def _build_step(self):
+        """(Re)build the vmapped tick at the current replica extent: the
+        residual block reshape is the only dp-dependent piece of the pool."""
+        dp, m = self.dp, self.n // self.dp
+
+        def _step(state, active):
+            xnew = jax.vmap(self.param_map)(state["x"], state["payload"])
+            upd = jnp.max(
+                jnp.abs(xnew - state["x"]).reshape(self.slots, dp, m), axis=2
+            )  # [S, dp]
+            x = jnp.where(active[:, None], xnew, state["x"])
+            residual = jnp.where(active[:, None], upd, RES_INIT).T  # [dp, S]
+            return {**state, "x": x}, residual
+
+        self.device_step = _step
+
+    def migrate_dp(self, new_dp: int) -> None:
+        """Elastic resize: re-block the residual report at the new extent.
+
+        The per-slot iterates and payloads are replica-independent (every
+        replica holds the same ``x``), so only the reporting reshape
+        changes — requests keep iterating exactly where they were.
+        """
+        if self.n % new_dp:
+            raise ValueError(f"n={self.n} must divide into dp={new_dp} blocks")
+        self.dp = new_dp
+        self._build_step()
 
     def reset(self):
         self.state = {

@@ -121,6 +121,51 @@ class _TerminationBase:
         """Only requests admitted at or before the cycle's latch may retire."""
         return sig["active"] & (sig["admit_tick"] <= t_latch)
 
+    # -- elastic resize (DESIGN.md S15) --------------------------------------
+
+    def migrate(self, st, keep, cfg: TerminationConfig, slots: int):
+        """Re-agree in-flight slot state after the replica extent changes.
+
+        ``keep[i]`` is the old replica now at new rank ``i`` (None = a
+        joiner); ``cfg`` is the config at the *new* extent.  The staged
+        reduction is abandoned — its stage counter and partial combines are
+        meaningless at the new extent, whose MRD cycle length differs — and
+        restarts from stage 0, so the next tick re-latches ``t_latch`` to
+        the current tick and every pre-resize admission stays retirable
+        (``admit_tick <= t_latch`` still holds: no re-prefill needed).
+        Everything certified so far survives; retirement requires a full
+        fresh cycle of agreement among the *new* replica set.
+        """
+        new = self.init(cfg, slots)
+        new["certified"] = st["certified"]
+        return new
+
+
+def _migrate_replica_rows(old_leaf, fresh_leaf, keep):
+    """Select per-replica monitor rows (axis 0) along the resize keep map.
+
+    Joiners take the fresh (RES_INIT-saturated) row, so they cannot help
+    certify a slot before observing a whole window themselves.  When the
+    per-row shape differs across extents (``window=0`` derives the window
+    from the cycle length, which changes with dp), a survivor's new window
+    is refilled with its running max — conservative by construction: the
+    row's contribution can only be >= what it was, never optimistic.
+    """
+    parts = []
+    for k in keep:
+        if k is None:
+            parts.append(fresh_leaf[0])
+        elif old_leaf.shape[1:] == fresh_leaf.shape[1:]:
+            parts.append(old_leaf[k])
+        else:
+            row_max = jnp.max(old_leaf[k], axis=-1, keepdims=True)
+            parts.append(
+                jnp.broadcast_to(row_max, fresh_leaf.shape[1:]).astype(
+                    fresh_leaf.dtype
+                )
+            )
+    return jnp.stack(parts)
+
 
 @register_termination("eos_maxlen")
 class EosMaxlenTermination(_TerminationBase):
@@ -209,6 +254,13 @@ class _ResidualTermination(_TerminationBase):
         return {
             "nb": nb, "m": m, "t_latch": t_latch, "certified": certified,
         }, retire
+
+    def migrate(self, st, keep, cfg: TerminationConfig, slots: int):
+        new = super().migrate(st, keep, cfg, slots)
+        new["m"] = jax.tree.map(
+            lambda o, f: _migrate_replica_rows(o, f, keep), st["m"], new["m"]
+        )
+        return new
 
 
 @register_termination("residual_inexact")

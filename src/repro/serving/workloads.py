@@ -87,6 +87,8 @@ class LLMDecodeWorkload:
         self.params = params
         self.slots = slots
         self._out = [[] for _ in range(slots)]
+        self.prefills = 0  # total prefill dispatches (chaos suite asserts
+        # resizes never force a re-prefill: prefills == requests served)
 
     def _make_pool(self, cfg, mesh, **kw):
         return DecodePool(cfg, mesh, **kw)
@@ -116,6 +118,7 @@ class LLMDecodeWorkload:
     def admit(self, req, slot: int, now: int) -> None:
         tok0 = self.pool.admit(self.params, req.prompt, slot)
         self._out[slot] = [tok0]
+        self.prefills += 1
 
     def device_step(self, params, wstate, active, tick):
         """Pure traced tick: ``-> (wstate, tokens [S], residual|None)``.
@@ -137,6 +140,7 @@ class LLMDecodeWorkload:
         """Fresh pool state, compiled steps kept (cheap engine re-runs)."""
         self.pool.reset()
         self._out = [[] for _ in range(self.slots)]
+        self.prefills = 0
 
 
 class PagedLLMWorkload(LLMDecodeWorkload):
@@ -158,6 +162,7 @@ class PagedLLMWorkload(LLMDecodeWorkload):
             self.params, req.prompt, slot, max_new=self.clamp_max_new(req)
         )
         self._out[slot] = [tok0]
+        self.prefills += 1
 
     def can_admit(self, req) -> bool:
         return self.pool.can_admit(
@@ -170,6 +175,14 @@ class PagedLLMWorkload(LLMDecodeWorkload):
     @property
     def prefix_saved_blocks(self) -> int:
         return self.pool.prefix_saved_blocks
+
+    # block tables + allocator refcounts/prefix registry ride the grow
+    # broadcast next to params and the paged device state
+    def export_state(self):
+        return self.pool.export_state()
+
+    def import_state(self, st) -> None:
+        self.pool.import_state(st)
 
 
 class FixedPointWorkload:
@@ -198,6 +211,12 @@ class FixedPointWorkload:
 
     def clamp_max_new(self, req) -> int:
         return int(req.max_new)
+
+    def migrate_dp(self, new_dp: int) -> None:
+        """Elastic resize: per-slot iterates survive untouched; only the
+        pool's residual block report re-layouts at the new extent."""
+        self.pool.migrate_dp(new_dp)
+        self.dp = new_dp
 
     def admit(self, req, slot: int, now: int) -> None:
         payload = self.payload0 if req.payload is None else req.payload

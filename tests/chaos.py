@@ -102,6 +102,18 @@ class ChaosScript:
                 ev.fire(trainer)
                 self.fired.append(ev)
 
+    def apply_due(self, trainer, step: int):
+        """Fire every not-yet-fired event with ``ev.step <= step``.
+
+        The serving engine's tick jumps by ``steps_per_dispatch`` per fused
+        call, so exact-step matching (``apply``) would skip events that land
+        inside a dispatch window; controllers that observe a coarse clock
+        use this hook instead."""
+        for ev in self.events:
+            if ev.step <= step and ev not in self.fired:
+                ev.fire(trainer)
+                self.fired.append(ev)
+
     @staticmethod
     def random(
         seed: int,
