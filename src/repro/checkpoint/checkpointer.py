@@ -6,10 +6,21 @@ Layout:  <dir>/step_<N>/   arrays.npz  (flat {path: np.array})
                                           data-pipeline state, wall time)
          <dir>/LATEST      (atomic pointer file)
 
-- *async save*: device->host transfer happens synchronously (cheap), the npz
-  write runs in a background thread; `wait()` joins before the next save.
+- *async save* (DESIGN.md S16): ``save(block=False)`` issues a per-leaf
+  ``copy_to_host_async`` and returns — the device->host transfer drains
+  while the next train step launches; a background thread materializes
+  the host arrays and writes the npz.  ``block='transfer'`` returns once
+  every leaf is materialized on the host (use when the train step
+  *donates* the state — the snapshot must not race the donor's buffer
+  deletion); ``block=True`` additionally joins the disk write.
+  ``wait()`` joins before the next save and re-raises any writer error.
+- *save policies*: ``save_every_steps`` / ``save_every_seconds`` drive
+  :meth:`maybe_save` (levanter-style time-based checkpointing for long
+  runs where a step cadence is the wrong unit).
 - *atomic publish*: write to step_N.tmp, fsync, rename, then update LATEST —
-  a crash mid-save never corrupts the restore point.
+  a crash mid-save never corrupts the restore point.  Stale ``step_N.tmp``
+  dirs a crash left behind are swept on construction and are invisible to
+  ``list_steps``/``latest_step``.
 - *elastic reshard*: restore takes the *target* shardings (possibly for a
   different mesh than the save-time mesh) and uses ``jax.device_put`` per
   leaf; combined with the MRD collectives' non-power-of-two support this is
@@ -51,6 +62,22 @@ def _flatten_with_paths(tree) -> dict[str, np.ndarray]:
         )
         flat[key] = np.asarray(jax.device_get(leaf))
     return flat
+
+
+def _stage_with_paths(tree) -> dict[str, Any]:
+    """{flat key: leaf} with the device->host copy *started* but not
+    awaited — the cheap, non-blocking half of :func:`_flatten_with_paths`.
+    Materialize later with ``np.asarray`` (which waits on the transfer)."""
+    staged = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if isinstance(p, jax.tree_util.DictKey) else str(p.idx)
+            for p in path
+        )
+        if hasattr(leaf, "copy_to_host_async"):
+            leaf.copy_to_host_async()
+        staged[key] = leaf
+    return staged
 
 
 def _unflatten_like(template, flat: dict[str, np.ndarray]):
@@ -136,52 +163,130 @@ def migrate_layout(
 
 
 class Checkpointer:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(
+        self,
+        directory: str,
+        keep: int = 3,
+        *,
+        save_every_steps: Optional[int] = None,
+        save_every_seconds: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
         self.dir = directory
         self.keep = keep
+        self.save_every_steps = save_every_steps
+        self.save_every_seconds = save_every_seconds
+        self._clock = clock
         os.makedirs(directory, exist_ok=True)
+        self._clean_stale_tmp()
         self._thread: Optional[threading.Thread] = None
+        self._staged: Optional[threading.Event] = None
+        self._error: Optional[BaseException] = None
+        # time-based policy counts from construction, so `save_every_seconds`
+        # means "at most this long between snapshots", not "save at step 1"
+        self._last_save_at = self._clock()
+
+    def _clean_stale_tmp(self):
+        """Sweep ``step_N.tmp`` dirs (and a dangling ``LATEST.tmp``) that a
+        crash mid-write left behind — they hold a torn snapshot and would
+        otherwise accumulate forever."""
+        for name in os.listdir(self.dir):
+            path = os.path.join(self.dir, name)
+            if name.startswith("step_") and name.endswith(".tmp"):
+                shutil.rmtree(path, ignore_errors=True)
+            elif name == "LATEST.tmp":
+                os.unlink(path)
 
     # ------------------------------------------------------------------ save
+    def should_save(self, step: int) -> bool:
+        """Step- or time-based save policy (whichever fires first)."""
+        if self.save_every_steps and step % self.save_every_steps == 0:
+            return True
+        if self.save_every_seconds is not None:
+            return self._clock() - self._last_save_at >= self.save_every_seconds
+        return False
+
+    def maybe_save(
+        self, step: int, state: Any, extra: Optional[dict] = None, *, block=False
+    ) -> bool:
+        """:meth:`save` iff the configured policy says so; returns whether
+        a save was issued."""
+        if not self.should_save(step):
+            return False
+        self.save(step, state, extra, block=block)
+        return True
+
     def save(self, step: int, state: Any, extra: Optional[dict] = None, *, block=False):
-        """Snapshot state (device->host now), write in background."""
+        """Snapshot ``state`` without blocking the caller on the
+        device->host transfer: issue per-leaf ``copy_to_host_async`` and
+        hand off to a background writer thread that materializes the host
+        arrays and publishes atomically.
+
+        ``block``: ``False`` returns immediately (safe whenever the
+        caller's buffers stay alive, e.g. donation off); ``'transfer'``
+        returns once every leaf is materialized on the host (required
+        before a donating train step may reuse the state's buffers);
+        ``True`` additionally joins the disk write.
+        """
         self.wait()
-        flat = _flatten_with_paths(state)
+        staged = _stage_with_paths(state)
         manifest = {
             "step": int(step),
             "time": time.time(),
             "extra": extra or {},
-            "n_arrays": len(flat),
+            "n_arrays": len(staged),
             "layout_version": LAYOUT_VERSION,
         }
+        transferred = threading.Event()
 
         def _write():
-            tmp = os.path.join(self.dir, f"step_{step}.tmp")
-            final = os.path.join(self.dir, f"step_{step}")
-            os.makedirs(tmp, exist_ok=True)
-            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
-            latest_tmp = os.path.join(self.dir, "LATEST.tmp")
-            with open(latest_tmp, "w") as f:
-                f.write(str(step))
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(latest_tmp, os.path.join(self.dir, "LATEST"))
-            self._gc()
+            try:
+                # waits on the in-flight d2h copies, off the train thread
+                flat = {k: np.asarray(v) for k, v in staged.items()}
+                transferred.set()
+                tmp = os.path.join(self.dir, f"step_{step}.tmp")
+                final = os.path.join(self.dir, f"step_{step}")
+                os.makedirs(tmp, exist_ok=True)
+                np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                latest_tmp = os.path.join(self.dir, "LATEST.tmp")
+                with open(latest_tmp, "w") as f:
+                    f.write(str(step))
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(latest_tmp, os.path.join(self.dir, "LATEST"))
+                self._gc()
+            except BaseException as e:  # surfaced by the next wait()
+                self._error = e
+                transferred.set()
 
+        self._staged = transferred
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
-        if block:
+        self._last_save_at = self._clock()
+        if block == "transfer":
+            transferred.wait()
+            self._raise_pending()
+        elif block:
             self.wait()
 
     def wait(self):
+        """Join the in-flight save (if any); re-raises a writer failure so a
+        torn snapshot can't silently become the restore point."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+            self._staged = None
+        self._raise_pending()
+
+    def _raise_pending(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _gc(self):
         steps = self.list_steps()

@@ -176,6 +176,46 @@ def build_layout(
     )
 
 
+def pack_bucket(leaves: Sequence, layout: BucketLayout, i: int):
+    """Pack bucket ``i`` of ``layout`` from a full ``jax.tree.leaves``-order
+    leaf list (entries outside the bucket's slots may be ``None``).
+
+    This is the per-bucket half of :func:`pack` — the ready-bucket
+    overlap path (DESIGN.md S16) packs each bucket the moment its
+    backward segment delivers the slots' gradients, so it must produce
+    byte-identical buffers to a post-backward :func:`pack`.
+    """
+    b = layout.buckets[i]
+    p = layout.stacked
+    parts = []
+    for s in b.slots:
+        leaf = leaves[s.index]
+        if leaf is None:
+            raise ValueError(
+                f"bucket {i} slot leaf {s.index} is not available yet"
+            )
+        if _dtype_name(leaf.dtype) != s.dtype:
+            raise ValueError(
+                f"leaf {s.index} has dtype {_dtype_name(leaf.dtype)}, "
+                f"layout expects {s.dtype} (buckets never promote)"
+            )
+        parts.append(leaf.reshape(-1) if p is None else leaf.reshape(p, -1))
+    pad = b.length - b.used
+    if p is None:
+        buf = jnp.concatenate(parts) if parts else jnp.zeros((0,), b.dtype)
+        if pad:
+            buf = jnp.pad(buf, (0, pad))
+    else:
+        buf = (
+            jnp.concatenate(parts, axis=1)
+            if parts
+            else jnp.zeros((p, 0), b.dtype)
+        )
+        if pad:
+            buf = jnp.pad(buf, ((0, 0), (0, pad)))
+    return buf
+
+
 def pack(tree, layout: BucketLayout) -> list:
     """Flatten ``tree`` into the layout's bucket buffers.
 
@@ -189,33 +229,7 @@ def pack(tree, layout: BucketLayout) -> list:
             f"tree structure {treedef} does not match the layout's "
             f"{layout.treedef}"
         )
-    p = layout.stacked
-    bufs = []
-    for b in layout.buckets:
-        parts = []
-        for s in b.slots:
-            leaf = leaves[s.index]
-            if _dtype_name(leaf.dtype) != s.dtype:
-                raise ValueError(
-                    f"leaf {s.index} has dtype {_dtype_name(leaf.dtype)}, "
-                    f"layout expects {s.dtype} (buckets never promote)"
-                )
-            parts.append(leaf.reshape(-1) if p is None else leaf.reshape(p, -1))
-        pad = b.length - b.used
-        if p is None:
-            buf = jnp.concatenate(parts) if parts else jnp.zeros((0,), b.dtype)
-            if pad:
-                buf = jnp.pad(buf, (0, pad))
-        else:
-            buf = (
-                jnp.concatenate(parts, axis=1)
-                if parts
-                else jnp.zeros((p, 0), b.dtype)
-            )
-            if pad:
-                buf = jnp.pad(buf, ((0, 0), (0, pad)))
-        bufs.append(buf)
-    return bufs
+    return [pack_bucket(leaves, layout, i) for i in range(len(layout.buckets))]
 
 
 def unpack(bufs: Sequence, layout: BucketLayout):

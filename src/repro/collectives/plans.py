@@ -428,6 +428,14 @@ class CollectivePlan:
         bufs = B.pack(tree, layout)
         return B.unpack(self.run_buffers(bufs), layout)
 
+    # -- late-admission pipelined execution (DESIGN.md S16) -----------------
+
+    def pipeline(self) -> "BucketPipeline":
+        """A :class:`BucketPipeline` over this plan — :meth:`run_buffers`
+        generalized so buckets may be *admitted while earlier buckets are
+        already in flight* (the ready-bucket grad-sync overlap path)."""
+        return BucketPipeline(self)
+
     # -- non-blocking state machine (paper Fig. 4) --------------------------
 
     def init(self, value) -> dict[str, Any]:
@@ -502,6 +510,93 @@ class CollectivePlan:
         for _ in range(self.cycle_length()):
             st = self.step(st, value)
         return st["result"]
+
+
+# ---------------------------------------------------------------------------
+# BucketPipeline: run_buffers with late admission (DESIGN.md S16)
+# ---------------------------------------------------------------------------
+
+
+class BucketPipeline:
+    """Stage-major pipelined execution with **late bucket admission**.
+
+    :meth:`CollectivePlan.run_buffers` needs every bucket up front; the
+    ready-bucket overlap path (gradsync ``overlap=True``) produces
+    buckets *while earlier buckets are already mid-schedule* — bucket k's
+    permutes must be in flight while the backward segments that feed
+    buckets k+1..N are still tracing.  This class is the same stage
+    interpreter (:func:`_stage_start` / :func:`_stage_finish`) with an
+    explicit in-flight set:
+
+    - :meth:`admit` packs a new bucket into the pipeline and issues its
+      first stage's permute;
+    - :meth:`advance` moves every in-flight bucket forward one stage
+      (finish the received payload, issue the next permute) — call it
+      between backward segments so the permutes overlap autodiff compute;
+    - :meth:`drain` runs all remaining stages stage-major and returns
+      the finished buffers.
+
+    Per bucket the stage sequence is exactly ``run_buffers``'s, and every
+    stage's math touches only that bucket's arrays, so results are
+    **bit-identical** to ``run_buffers`` for any admission/advance
+    interleaving — including for lossy transforms (int8 block grids are
+    keyed to offsets within a bucket, which this never changes).
+    """
+
+    def __init__(self, plan: CollectivePlan):
+        self.plan = plan
+        self.table = plan.bound_stage_table()
+        self._op = resolve_op(plan.op)
+        self._tf = plan._transform()
+        self._check_quantum = any(
+            coll == "reduce_scatter" for _, coll, _, _ in self.table
+        )
+        self._q = plan.pad_quantum() if self._check_quantum else 1
+        self._inflight: dict = {}  # key -> (stage index started, ctx)
+        self._done: dict = {}
+
+    def _start(self, buf, i: int):
+        st, _coll, ai, _p = self.table[i]
+        return _stage_start(buf, st, self.plan._backend(ai), self._tf)
+
+    def _finish(self, ctx, i: int):
+        st, _coll, ai, p = self.table[i]
+        return _stage_finish(ctx, st, self.plan._backend(ai), p, self._op, self._tf)
+
+    def admit(self, key, buf) -> None:
+        """Enter ``buf`` into the pipeline under ``key`` and issue its
+        first stage.  Plans with no stages (all axes size 1) complete
+        immediately."""
+        if key in self._inflight or key in self._done:
+            raise ValueError(f"bucket {key!r} admitted twice")
+        if self._check_quantum and buf.shape[-1] % self._q:
+            raise ValueError(
+                f"reduce-scatter phases need buffer len % {self._q} == 0 "
+                f"(pad_quantum), got {buf.shape[-1]} for bucket {key!r}"
+            )
+        if not self.table:
+            self._done[key] = buf
+            return
+        self._inflight[key] = (0, self._start(buf, 0))
+
+    def advance(self) -> None:
+        """Advance every in-flight bucket by one stage (admission order)."""
+        for key in list(self._inflight):
+            i, ctx = self._inflight[key]
+            buf = self._finish(ctx, i)
+            if i + 1 < len(self.table):
+                self._inflight[key] = (i + 1, self._start(buf, i + 1))
+            else:
+                del self._inflight[key]
+                self._done[key] = buf
+
+    def drain(self) -> dict:
+        """Run all remaining stages stage-major; returns {key: buffer}
+        and resets the pipeline."""
+        while self._inflight:
+            self.advance()
+        out, self._done = self._done, {}
+        return out
 
 
 # ---------------------------------------------------------------------------

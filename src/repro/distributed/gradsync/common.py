@@ -58,6 +58,13 @@ class TrainConfig:
     # collective engine (repro.collectives.buckets, DESIGN.md S10);
     # None = one unbounded bucket per dtype
     bucket_bytes: Optional[int] = 32 * 2**20
+    # ready-bucket grad-sync overlap (DESIGN.md S16): issue each gradient
+    # bucket's MRD stages as its backward segment completes instead of
+    # after the full backward.  Bit-identical results by construction
+    # (same BucketLayout, only issue order changes).  Honored by the
+    # gradient-scale modes (mrd_leaf, mrd_paper, mrd_zero1, compressed);
+    # gspmd/local_sgd have no bucketed gradient path and ignore it.
+    overlap: bool = False
 
 
 def manual_rules(rules: shd.ShardingRules) -> shd.ShardingRules:

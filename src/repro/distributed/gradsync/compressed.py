@@ -4,7 +4,10 @@ fp32).  On TPU the per-stage dequant-accumulate runs through the
 ``mrd_combine`` Pallas kernel via the ``device_fused`` executor.  Like
 ``mrd_zero1``, the gradient is bucketed and the RS/AG stages pipeline
 across buckets (DESIGN.md S10); buckets stay 256-block aligned so the
-quantizer never straddles a bucket boundary.
+quantizer never straddles a bucket boundary.  ``tcfg.overlap`` issues
+each bucket (EF round-trip included) as its backward segment completes —
+the int8 block grid is keyed to offsets *within* a bucket, which the
+overlap never changes, so results stay bit-identical (DESIGN.md S16).
 
 Quantization noise is bounded per stage (see
 ``repro.collectives.transforms``) and — with ``tcfg.error_feedback``, the

@@ -3,6 +3,10 @@
 Params FSDP+TP sharded; XLA inserts the DP all-reduce in backward.  The
 ConvergenceMonitor still advances the paper's staged MRD detection — one
 scalar ppermute per step inside a tiny shard_map over the DP axes.
+
+``tcfg.overlap`` is a no-op here: there is no explicit bucketed gradient
+path to reorder — XLA's latency-hiding scheduler already interleaves its
+own all-reduces with backward compute (DESIGN.md S16).
 """
 
 from __future__ import annotations

@@ -7,6 +7,10 @@ collectives (one chained Rabenseifner RS+AG plan over the flat vector).
 Stragglers never block intermediate steps; the staleness bound plays the
 role of the paper's bounded retards.  Per-replica state costs dp x the
 replicated-params memory — pair with TP for larger models.
+
+``tcfg.overlap`` is a no-op here: gradients never cross the DP axes
+(only the periodic param average does), so there is no per-step bucketed
+reduction to overlap with the backward (DESIGN.md S16).
 """
 
 from __future__ import annotations

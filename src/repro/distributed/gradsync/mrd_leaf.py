@@ -25,9 +25,10 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.collectives import plans
+from repro.collectives import buckets, plans
 from repro.distributed import sharding as shd
 from repro.distributed.gradsync import common, register, register_resize
+from repro.distributed.gradsync import overlap as overlap_lib
 from repro.distributed.gradsync.common import TrainConfig
 from repro.models import transformer
 from repro.models.config import ModelConfig
@@ -47,6 +48,23 @@ def make(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
     grad_ar = plans.allreduce_plan(
         schedule="mrd", axes=dp_axes, op="sum", executor=executor
     )
+    if tcfg.overlap:
+        # ready-bucket overlap (DESIGN.md S16): prebuild the same fp32
+        # layout run_bucketed would derive from the gradient tree, so the
+        # overlapped path is bit-identical by construction
+        pshape = jax.eval_shape(
+            lambda: transformer.init_params(cfg, jax.random.PRNGKey(0))
+        )
+        fp32 = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(tuple(l.shape), jnp.float32), pshape
+        )
+        layout = buckets.build_layout(
+            fp32, bucket_bytes=tcfg.bucket_bytes, quantum=grad_ar.pad_quantum()
+        )
+        koffs = overlap_lib.key_offsets(pshape)
+        bgroups = overlap_lib.bucket_groups(
+            layout, overlap_lib.leaf_groups(pshape)
+        )
 
     def init_state(key):
         params = transformer.init_params(cfg, key)
@@ -72,13 +90,26 @@ def make(cfg: ModelConfig, mesh: Mesh, tcfg: TrainConfig):
 
     def train_step(state, batch):
         def local_step(params, opt, step, mon_state, local_batch):
-            with shd.sharding_ctx(cfg, common.manual_rules(rules)):
-                grads, loss, metrics = common.microbatched_grads(
-                    params, local_batch, cfg, remat_policy, tcfg.microbatches
-                )
-            # the paper's butterfly, pipelined over dtype-homogeneous
-            # gradient buckets (stage-major; DESIGN.md S10)
-            grads = grad_ar.run_bucketed(grads, bucket_bytes=tcfg.bucket_bytes)
+            if tcfg.overlap:
+                # segmented backward, ready buckets issued mid-backward
+                # through the same butterfly (DESIGN.md S16)
+                with shd.sharding_ctx(cfg, common.manual_rules(rules)):
+                    emitter = overlap_lib.segmented_grads(
+                        params, local_batch, cfg, remat_policy,
+                        tcfg.microbatches,
+                    )
+                    loss, metrics, red, _ = overlap_lib.drive(
+                        emitter, layout, koffs, bgroups, plan=grad_ar
+                    )
+                grads = buckets.unpack(red, layout)
+            else:
+                with shd.sharding_ctx(cfg, common.manual_rules(rules)):
+                    grads, loss, metrics = common.microbatched_grads(
+                        params, local_batch, cfg, remat_policy, tcfg.microbatches
+                    )
+                # the paper's butterfly, pipelined over dtype-homogeneous
+                # gradient buckets (stage-major; DESIGN.md S10)
+                grads = grad_ar.run_bucketed(grads, bucket_bytes=tcfg.bucket_bytes)
             grads = jax.tree.map(lambda g: g / dp, grads)
             grads, gnorm = opt_lib.clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
             params, opt = opt_lib.apply_update(

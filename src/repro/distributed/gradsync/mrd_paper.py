@@ -5,9 +5,11 @@ Pure modified-recursive-doubling Allreduce of the full fp32 gradient
 no optimizer-state sharding.  The gradient travels in size-capped buckets
 executed stage-major (``repro.collectives.buckets`` +
 :meth:`repro.collectives.plans.CollectivePlan.run_buffers`, DESIGN.md
-S10) rather than as one monolithic flat vector.  This is the reference
-the beyond-paper modes (``mrd_zero1``, ``compressed``) are measured
-against.
+S10) rather than as one monolithic flat vector; with ``tcfg.overlap``
+each bucket's butterfly is issued as its backward segment completes
+(ready-bucket overlap, DESIGN.md S16 — bit-identical either way).  This
+is the reference the beyond-paper modes (``mrd_zero1``, ``compressed``)
+are measured against.
 """
 
 from __future__ import annotations

@@ -33,6 +33,7 @@ from repro.collectives import buckets, plans
 from repro.collectives.schedules import pivot
 from repro.distributed import sharding as shd
 from repro.distributed.gradsync import common, register, register_resize
+from repro.distributed.gradsync import overlap as overlap_lib
 from repro.distributed.gradsync.common import TrainConfig
 from repro.models import transformer
 from repro.models.config import ModelConfig
@@ -239,6 +240,15 @@ def make_zero1(
     full_bounds = list(np.cumsum(layout.bucket_lengths)[:-1])
     shard_bounds = [b // prod_p0 for b in full_bounds]
     use_ef = tcfg.error_feedback and transform != "identity"
+    # the gradient-reducing plan: full-bucket butterfly (paper) or chained RS
+    grad_plan = full_ar if paper_mode else rs_plan
+    if tcfg.overlap:
+        # ready-bucket overlap (DESIGN.md S16): same layout, same plan —
+        # only the bucket *issue order* moves inside the backward
+        koffs = overlap_lib.key_offsets(pshape)
+        bgroups = overlap_lib.bucket_groups(
+            layout, overlap_lib.leaf_groups(pshape)
+        )
 
     def init_state(key):
         params = transformer.init_params(cfg, key)
@@ -284,34 +294,54 @@ def make_zero1(
 
     def train_step(state, batch):
         def local_step(params, opt, step, mon_state, local_batch):
-            with shd.sharding_ctx(cfg, common.manual_rules(rules)):
-                grads, loss, metrics = common.microbatched_grads(
-                    params, local_batch, cfg, remat_policy, tcfg.microbatches
-                )
-            # dtype-homogeneous, quantum-padded gradient buckets
-            bufs = buckets.pack(
-                jax.tree.map(lambda g: g.astype(jnp.float32), grads), layout
-            )
             if use_ef:
                 # EF-SGD: send the grid round-trip of (grad + residual),
                 # carry what the quantizer dropped into the next step
                 from repro.collectives import transforms as tf_lib
 
                 ef_bufs = jnp.split(opt["ef"][0], full_bounds)
-                pairs = [tf_lib.ef_roundtrip(b, e) for b, e in zip(bufs, ef_bufs)]
-                bufs = [s for s, _ in pairs]
-                new_ef = jnp.concatenate([e for _, e in pairs])
+
+                def wire(i, buf):
+                    return tf_lib.ef_roundtrip(buf, ef_bufs[i])
+
+            if tcfg.overlap:
+                # segmented backward feeding ready buckets straight into
+                # the plan's stage pipeline (bit-identical to the
+                # post-backward path below — DESIGN.md S16)
+                with shd.sharding_ctx(cfg, common.manual_rules(rules)):
+                    emitter = overlap_lib.segmented_grads(
+                        params, local_batch, cfg, remat_policy,
+                        tcfg.microbatches,
+                    )
+                    loss, metrics, red, efs = overlap_lib.drive(
+                        emitter, layout, koffs, bgroups,
+                        plan=grad_plan, wire=wire if use_ef else None,
+                    )
+                if use_ef:
+                    new_ef = jnp.concatenate(efs)
+            else:
+                with shd.sharding_ctx(cfg, common.manual_rules(rules)):
+                    grads, loss, metrics = common.microbatched_grads(
+                        params, local_batch, cfg, remat_policy, tcfg.microbatches
+                    )
+                # dtype-homogeneous, quantum-padded gradient buckets
+                bufs = buckets.pack(
+                    jax.tree.map(lambda g: g.astype(jnp.float32), grads), layout
+                )
+                if use_ef:
+                    pairs = [wire(i, b) for i, b in enumerate(bufs)]
+                    bufs = [s for s, _ in pairs]
+                    new_ef = jnp.concatenate([e for _, e in pairs])
+                # paper_mode: the paper's Allreduce, a full-buffer XOR
+                # butterfly per DP axis; else the beyond-paper chained RS —
+                # either way one pipelined stage-major pass over all buckets
+                red = grad_plan.run_buffers(bufs)
             if paper_mode:
-                # the paper's Allreduce: full-buffer XOR butterfly per DP
-                # axis, pipelined stage-major across buckets
-                red = full_ar.run_buffers(bufs)
                 gshard = jnp.concatenate(red) / dp
                 gnorm = jnp.sqrt(jnp.sum(gshard * gshard))
             else:
-                # beyond-paper: chained RS over DP axes, one pipelined
-                # pass over all buckets -> concatenated mean segments
-                shards = rs_plan.run_buffers(bufs)
-                gshard = jnp.concatenate(shards) / dp
+                # concatenated mean segments of the reduce-scattered buckets
+                gshard = jnp.concatenate(red) / dp
                 # global grad norm via the paper's MRD allreduce on a scalar
                 own = _is_owner()
                 sq = jnp.where(own, jnp.sum(gshard * gshard), 0.0)

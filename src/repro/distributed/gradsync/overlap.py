@@ -1,0 +1,269 @@
+"""Ready-bucket grad-sync overlap (DESIGN.md S16).
+
+The bucketed MRD engine (DESIGN.md S10) pipelines collective stages
+*across* buckets, but every strategy still waits for the **full**
+backward before packing the first bucket — the classic DDP stall.  This
+module extends the stage-major pipelining across the autodiff boundary:
+
+1. :func:`segmented_grads` computes the backward as three manually
+   composed VJPs over the model's natural reverse-topological readiness
+   groups — **head** (``final_norm``/``lm_head``), **stack** (the
+   scanned layer parameters), **embed** (``embed``/``patch_proj``/
+   ``frame_proj``) — and *yields* each group's gradients as they
+   complete.  Scanned layer leaves are stacked ``[L, ...]`` arrays whose
+   gradients only exist once the whole backward scan finishes, so
+   top-level-key granularity is the finest readiness the program
+   structure admits without changing leaf shapes (which would change
+   bucket layouts and break the compressed path's bit-exactness).
+2. :func:`drive` consumes that generator, packs each bucket the moment
+   all of its slots' gradients exist (same :class:`BucketLayout` as the
+   post-backward path — only the *issue order* changes, never element
+   offsets), admits it into a
+   :class:`repro.collectives.plans.BucketPipeline`, and advances every
+   in-flight bucket one stage per readiness group — so the head bucket's
+   MRD permutes are in flight while the (dominant) backward scan is
+   still running.
+
+Bit-exactness contract: per bucket the stage math is exactly
+``run_buffers``'s and each stage touches only that bucket's arrays, so
+the reduced buffers — and therefore params, optimizer moments, and the
+EF residual — are **bit-identical** to the post-backward bucketed path
+for every transform, extent, and dtype.  The differential suite
+(tests/test_overlap_differential.py) enforces this.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.collectives import buckets, plans
+from repro.distributed import sharding as shd
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import dtype_of
+
+# Readiness groups in backward (reverse-topological) order.  Any top-level
+# param key not named here is part of the layer stack (group 1) — every
+# family's stacked keys (layers | local_layers+global_layers |
+# mamba_groups+shared_attn) land there without per-family tables.
+HEAD_KEYS = frozenset({"final_norm", "lm_head"})
+EMBED_KEYS = frozenset({"embed", "patch_proj", "frame_proj"})
+GROUP_NAMES = ("head", "stack", "embed")
+N_GROUPS = len(GROUP_NAMES)
+
+
+def group_of_key(key: str) -> int:
+    if key in HEAD_KEYS:
+        return 0
+    if key in EMBED_KEYS:
+        return 2
+    return 1
+
+
+def _split_params(params):
+    """Partition the top-level param dict into (head, stack, embed)."""
+    groups: tuple[dict, dict, dict] = ({}, {}, {})
+    for k, v in params.items():
+        groups[group_of_key(k)][k] = v
+    return groups
+
+
+def key_offsets(pshape) -> dict[str, int]:
+    """Global ``jax.tree.leaves`` index of each top-level key's first leaf.
+
+    jax flattens dicts in sorted-key order and subtree leaves contiguously,
+    so ``leaves(tree)[off[k] : off[k] + n_k] == leaves(tree[k])``.
+    """
+    out, off = {}, 0
+    for k in sorted(pshape.keys()):
+        out[k] = off
+        off += len(jax.tree.leaves(pshape[k]))
+    return out
+
+
+def leaf_groups(pshape) -> list[int]:
+    """Per-leaf readiness group index, in ``jax.tree.leaves`` order."""
+    out: list[int] = []
+    for k in sorted(pshape.keys()):
+        out.extend([group_of_key(k)] * len(jax.tree.leaves(pshape[k])))
+    return out
+
+
+def bucket_groups(layout: buckets.BucketLayout, lgroups: list[int]) -> list[int]:
+    """Readiness group per bucket: a bucket is packable once its *latest*
+    slot's group has emitted."""
+    return [max(lgroups[s.index] for s in b.slots) for b in layout.buckets]
+
+
+def _label_offset(batch, cfg: ModelConfig) -> int:
+    """Static mirror of :func:`transformer._embed_inputs`'s label_offset."""
+    if cfg.frontend == "vision" and "patches" in batch:
+        return batch["patches"].shape[1]
+    return 0
+
+
+def _one_batch_segments(params, batch, cfg: ModelConfig, remat_policy):
+    """Segmented forward for ONE (micro)batch.
+
+    Returns ``(loss, metrics, backward)`` where ``backward()`` generates
+    ``(group_name, grad_piece)`` in readiness order — grad pieces are
+    top-level-key dicts in the model's param dtype (cast to fp32 by the
+    caller, mirroring ``common.microbatched_grads``).
+    """
+    ph, ps, pe = _split_params(params)
+    cdt = dtype_of(cfg.compute_dtype)
+    off = _label_offset(batch, cfg)
+    tied = cfg.tie_embeddings and "embed" in pe
+
+    def embed_fn(pe_):
+        x, _ = transformer._embed_inputs(pe_, batch, cfg)
+        return shd.constrain(x.astype(cdt), "tokens")
+
+    x0, e_vjp = jax.vjp(embed_fn, pe)
+    S = x0.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def stack_fn(ps_, x):
+        return transformer._run_stack(ps_, x, cfg, positions, remat_policy)
+
+    (x1, aux), s_vjp = jax.vjp(stack_fn, ps, x0)
+
+    if tied:
+        # the tied output head reads params['embed'], which belongs to the
+        # *embed* readiness group — take its head-side cotangent as a
+        # separate VJP input and fold it into the embed-group gradient
+        def head_fn(ph_, embed, x, a):
+            return transformer._train_head(
+                {**ph_, "embed": embed}, x, a, batch, cfg, off
+            )
+
+        loss, h_vjp, metrics = jax.vjp(
+            head_fn, ph, pe["embed"], x1, aux, has_aux=True
+        )
+    else:
+
+        def head_fn(ph_, x, a):
+            return transformer._train_head(ph_, x, a, batch, cfg, off)
+
+        loss, h_vjp, metrics = jax.vjp(head_fn, ph, x1, aux, has_aux=True)
+
+    def backward():
+        ct = jnp.ones_like(loss)
+        if tied:
+            gh, g_embed_head, ct_x1, ct_aux = h_vjp(ct)
+        else:
+            gh, ct_x1, ct_aux = h_vjp(ct)
+        yield "head", gh
+        gs, ct_x0 = s_vjp((ct_x1, ct_aux))
+        yield "stack", gs
+        (ge,) = e_vjp(ct_x0)
+        if tied:
+            # the two cotangent contributions of a fanned-out primal are
+            # summed — one commutative add, bitwise identical to the
+            # composite backward's accumulation
+            ge = dict(ge)
+            ge["embed"] = ge["embed"] + g_embed_head
+        yield "embed", ge
+
+    return loss, metrics, backward
+
+
+def segmented_grads(params, batch, cfg: ModelConfig, remat_policy, microbatches: int):
+    """Generator form of :func:`common.microbatched_grads`.
+
+    First yields ``(mean_loss, metrics_last)``; then ``(group_name,
+    grads_fp32_piece)`` for head → stack → embed, each piece already
+    microbatch-accumulated and averaged.  Joint output is bit-identical
+    to ``common.microbatched_grads`` on the same inputs: for
+    ``microbatches > 1`` the first M-1 microbatches run through the exact
+    same fp32 accumulation scan and only the last microbatch's backward
+    is segmented, preserving the accumulation association
+    ``(((g_0+g_1)+...)+g_{M-1}) / M``.
+    """
+    if microbatches == 1:
+        loss, metrics, backward = _one_batch_segments(
+            params, batch, cfg, remat_policy
+        )
+        yield loss, metrics
+        for name, piece in backward():
+            yield name, jax.tree.map(lambda g: g.astype(jnp.float32), piece)
+        return
+
+    def reshape_mb(x):
+        return x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:])
+
+    mbs = jax.tree.map(lambda x: shd.constrain(reshape_mb(x), "mb_batch"), batch)
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def loss_fn(p, mb):
+        return transformer.forward_train(p, mb, cfg, remat_policy)
+
+    def body(carry, mb):
+        g_acc, loss_acc = carry
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+        return (g_acc, loss_acc + loss), metrics
+
+    head_mbs = jax.tree.map(lambda x: x[:-1], mbs)
+    (g_part, loss_part), _ = jax.lax.scan(
+        body, (g0, 0.0), head_mbs, unroll=cfg.scan_unroll
+    )
+    mb_last = jax.tree.map(lambda x: x[-1], mbs)
+    loss_last, metrics, backward = _one_batch_segments(
+        params, mb_last, cfg, remat_policy
+    )
+    yield (loss_part + loss_last) / microbatches, metrics
+    for name, piece in backward():
+        acc = {k: g_part[k] for k in piece}
+        yield name, jax.tree.map(
+            lambda a, b: (a + b.astype(jnp.float32)) / microbatches, acc, piece
+        )
+
+
+def drive(
+    emitter,
+    layout: buckets.BucketLayout,
+    koffsets: dict[str, int],
+    bgroups: list[int],
+    *,
+    plan: plans.CollectivePlan,
+    wire=None,
+):
+    """Consume a :func:`segmented_grads` generator, admitting each bucket
+    into ``plan``'s :class:`BucketPipeline` the moment its readiness group
+    emits, and advancing all in-flight buckets one stage per group.
+
+    ``wire(i, buf) -> (wire_buf, aux)`` optionally maps a packed fp32
+    bucket to its wire payload (the EF-SGD round-trip hook); ``aux`` per
+    bucket is collected and returned.  Returns ``(loss, metrics,
+    reduced_bufs, wire_aux)`` with buffers in bucket order.
+    """
+    loss, metrics = next(emitter)
+    leaves: list = [None] * layout.n_leaves
+    pipe = plan.pipeline()
+    wire_aux: list = [None] * len(layout.buckets)
+    emitted = 0
+    for gi, (_name, piece) in enumerate(emitter):
+        for k in sorted(piece.keys()):
+            base = koffsets[k]
+            for j, leaf in enumerate(jax.tree.leaves(piece[k])):
+                leaves[base + j] = leaf
+        for bi, bg in enumerate(bgroups):
+            if bg == gi:
+                buf = buckets.pack_bucket(leaves, layout, bi)
+                if wire is not None:
+                    buf, wire_aux[bi] = wire(bi, buf)
+                pipe.admit(bi, buf)
+                emitted += 1
+        # one stage per in-flight bucket, issued before the next backward
+        # segment traces — the overlap point
+        pipe.advance()
+    if emitted != len(layout.buckets):
+        raise ValueError(
+            f"emitted {emitted} of {len(layout.buckets)} buckets — "
+            "readiness groups do not cover the layout"
+        )
+    done = pipe.drain()
+    bufs = [done[i] for i in range(len(layout.buckets))]
+    return loss, metrics, bufs, wire_aux

@@ -288,5 +288,8 @@ def constrain(x, kind: str):
         return jax.lax.with_sharding_constraint(
             x, NamedSharding(ctx.rules.mesh, spec)
         )
-    except ValueError:
-        return x  # indivisible shape for this spec: leave to GSPMD
+    except (TypeError, ValueError):
+        # ValueError: indivisible shape for this spec — leave to GSPMD.
+        # TypeError: eager (op-by-op) execution outside jit, where the
+        # constraint is a no-op hint anyway (dispatch-regime benchmarks).
+        return x

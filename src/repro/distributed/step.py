@@ -41,6 +41,9 @@ from repro.distributed.gradsync.mrd_zero1 import (  # noqa: F401
     zero1_owner_segments,
     zero1_shard_len,
 )
+from repro.distributed.gradsync.overlap import (  # noqa: F401
+    segmented_grads,
+)
 from repro.distributed.serve import (  # noqa: F401
     cache_specs,
     make_cached_prefill_step,

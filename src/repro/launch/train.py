@@ -59,6 +59,13 @@ def main(argv=None):
     ap.add_argument("--no-error-feedback", action="store_true",
                     help="disable the EF-SGD residual carry of the "
                          "'compressed' grad-sync mode")
+    ap.add_argument("--overlap", action="store_true", default=False,
+                    help="ready-bucket grad-sync overlap (DESIGN.md S16): "
+                         "issue each gradient bucket's MRD stages as its "
+                         "backward segment completes; bit-identical to the "
+                         "post-backward path (gradient-scale modes only)")
+    ap.add_argument("--no-overlap", dest="overlap", action="store_false",
+                    help="post-backward bucketed grad sync (the default)")
     ap.add_argument("--no-donate", action="store_true",
                     help="never donate the train state to jit (donation is "
                          "already skipped on CPU, where it deadlocks "
@@ -70,6 +77,10 @@ def main(argv=None):
                          "drain_straggler); default: plain train loop")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-every-seconds", type=float, default=None,
+                    help="also snapshot whenever this much wall time has "
+                         "passed since the last save (time-based policy; "
+                         "combines with --ckpt-every, whichever fires first)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--bucket-bytes", type=int, default=32 * 2**20,
@@ -89,6 +100,7 @@ def main(argv=None):
         monitor_mode=args.monitor_mode,
         monitor_threshold=args.monitor_threshold,
         error_feedback=not args.no_error_feedback,
+        overlap=args.overlap,
         bucket_bytes=args.bucket_bytes or None,
         optimizer=OptimizerConfig(
             lr=args.lr, schedule=args.schedule,
@@ -96,7 +108,15 @@ def main(argv=None):
             total_steps=args.steps,
         ),
     )
-    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    ck = (
+        Checkpointer(
+            args.ckpt_dir,
+            save_every_steps=args.ckpt_every,
+            save_every_seconds=args.ckpt_every_seconds,
+        )
+        if args.ckpt_dir
+        else None
+    )
 
     if args.elastic_policy is not None:
         # policy-driven elastic runtime (DESIGN.md S12): failures shrink the
@@ -147,6 +167,11 @@ def main(argv=None):
         # nothing on CPU anyway, so gate it on the backend.
         donate = (0,) if jax.default_backend() != "cpu" and not args.no_donate else ()
         jstep = jax.jit(train_step, donate_argnums=donate)
+        # async snapshots: with donation on, the next jstep call deletes the
+        # state's buffers, so the save must at least finish the d2h transfer
+        # ('transfer'); without donation the buffers stay alive and the save
+        # can be fully fire-and-forget
+        save_block = "transfer" if donate else False
 
         t0 = time.time()
         for i in range(args.steps):
@@ -157,8 +182,14 @@ def main(argv=None):
                     f"gnorm={float(metrics['grad_norm']):.3f} "
                     f"({(time.time()-t0)/(i+1)*1e3:.0f} ms/step)"
                 )
-            if ck is not None and (i + 1) % args.ckpt_every == 0:
-                ck.save(int(state["step"]), state, extra={"data": pipe.state_dict()})
+            if ck is not None and ck.should_save(i + 1):
+                # pipe.state_dict() is captured *now*, in the same host
+                # instant the state leaves are staged — snapshot and data
+                # cursor stay consistent even though the write is async
+                ck.save(
+                    int(state["step"]), state,
+                    extra={"data": pipe.state_dict()}, block=save_block,
+                )
             if tcfg.monitor and bool(metrics["converged"]):
                 print(
                     f"ConvergenceMonitor ({args.monitor_mode}) certified "

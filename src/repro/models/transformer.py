@@ -278,13 +278,15 @@ def _run_stack(params, x, cfg, positions, remat_policy=None):
     raise ValueError(cfg.family)
 
 
-def forward_train(params, batch, cfg: ModelConfig, remat_policy=None):
-    """Returns (loss, metrics)."""
-    x, label_offset = _embed_inputs(params, batch, cfg)
-    x = constrain(x.astype(dtype_of(cfg.compute_dtype)), "tokens")
-    B, S = x.shape[:2]
-    positions = jnp.arange(S)[None, :]
-    x, aux = _run_stack(params, x, cfg, positions, remat_policy)
+def _train_head(params, x, aux, batch, cfg: ModelConfig, label_offset: int = 0):
+    """Final norm + logits + CE loss on the stack output ``x``.
+
+    Reads only ``final_norm`` and the output head (``lm_head``, or
+    ``embed`` when tied) from ``params``.  Split out of
+    :func:`forward_train` so the ready-bucket overlap path can take its
+    VJP separately from the stack and embedding segments (DESIGN.md S16)
+    while both paths share the exact same ops.
+    """
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
     if label_offset:
         x = x[:, label_offset:]
@@ -307,6 +309,16 @@ def forward_train(params, batch, cfg: ModelConfig, remat_policy=None):
     per_example = -(ll * mask).sum(-1) / jnp.maximum(mask.sum(-1), 1.0)  # [B]
     total = loss + 0.01 * aux
     return total, {"loss": loss, "aux_loss": aux, "ntok": ntok, "per_example": per_example}
+
+
+def forward_train(params, batch, cfg: ModelConfig, remat_policy=None):
+    """Returns (loss, metrics)."""
+    x, label_offset = _embed_inputs(params, batch, cfg)
+    x = constrain(x.astype(dtype_of(cfg.compute_dtype)), "tokens")
+    B, S = x.shape[:2]
+    positions = jnp.arange(S)[None, :]
+    x, aux = _run_stack(params, x, cfg, positions, remat_policy)
+    return _train_head(params, x, aux, batch, cfg, label_offset)
 
 
 # ---------------------------------------------------------------------------

@@ -442,6 +442,39 @@ def test_chaos_straggler_drain_and_silent_kill():
 
 
 @pytest.mark.slow
+def test_chaos_kill_join_with_overlap():
+    """Elastic resize under the ready-bucket overlap path (DESIGN.md S16):
+    kills and joins crossing non-power-of-two extents with ``overlap=True``
+    must stay bit-identical both to the same chaotic run without overlap
+    (pure-reordering invariant survives rebuilds) and to the per-extent
+    oracle replay."""
+    out = _run(
+        """
+        dcfg = DataConfig(batch=60, seq_len=8, seed=0)  # 4, 3, 5 all divide
+        dev_ids = [0, 1, 2, 3]
+        script = [Kill(2, 2), Join(4, (2, 4))]   # 4 -> 3 at 2, 3 -> 5 at 4
+        steps = 8
+        tcfg_o = make_tcfg(overlap=True)
+        tr, state, losses = run_chaos(tcfg_o, dcfg, dev_ids,
+                                      ChaosScript(list(script)), steps,
+                                      "grow_on_join")
+        assert [ (e.old_dp, e.new_dp) for e in tr.resizes ] == [(4, 3), (3, 5)]
+        tcfg_b = make_tcfg(overlap=False)
+        tr_b, state_b, losses_b = run_chaos(tcfg_b, dcfg, dev_ids,
+                                            ChaosScript(list(script)), steps,
+                                            "grow_on_join")
+        assert losses == losses_b, ("overlap vs baseline", losses, losses_b)
+        assert_params_bit_identical(state["params"], state_b["params"], "ovl")
+        assert_params_bit_identical(state["opt"], state_b["opt"], "ovl:opt")
+        check_vs_oracle(tr, state, losses, tcfg_o, dcfg, dev_ids, steps,
+                        "overlap-chaos")
+        print("CHAOS-OVERLAP-PASSED")
+        """
+    )
+    assert "CHAOS-OVERLAP-PASSED" in out
+
+
+@pytest.mark.slow
 def test_chaos_random_seeded_scripts():
     """Seeded random legal kill/join sequences (the 'any legal sequence'
     clause): every one is bit-identical to its oracle replay."""

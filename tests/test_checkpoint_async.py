@@ -1,0 +1,230 @@
+"""Async checkpointing semantics (DESIGN.md S16): non-blocking ``save``,
+the tri-state ``block`` contract, stale-tmp crash recovery, writer-error
+propagation, and the step/time save policies."""
+
+from __future__ import annotations
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.checkpoint import checkpointer as ckpt_lib  # noqa: E402
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: E402
+
+
+def _state(seed=0, n=64):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w": jnp.asarray(rng.standard_normal((n, n)).astype(np.float32)),
+            "b": jnp.asarray(rng.standard_normal((n,)).astype(np.float32)),
+        },
+        "step": jnp.asarray(seed, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Stale-tmp sweep (crash recovery)
+# ---------------------------------------------------------------------------
+
+def test_stale_tmp_swept_on_construction(tmp_path):
+    d = str(tmp_path)
+    # a crash mid-write left a torn snapshot dir and a dangling pointer tmp
+    os.makedirs(os.path.join(d, "step_7.tmp"))
+    with open(os.path.join(d, "step_7.tmp", "arrays.npz"), "wb") as f:
+        f.write(b"torn")
+    with open(os.path.join(d, "LATEST.tmp"), "w") as f:
+        f.write("7")
+    ck = Checkpointer(d)
+    assert not os.path.exists(os.path.join(d, "step_7.tmp"))
+    assert not os.path.exists(os.path.join(d, "LATEST.tmp"))
+    assert ck.list_steps() == []
+    assert ck.latest_step() is None
+
+
+def test_tmp_dirs_invisible_to_listing(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, _state(3), block=True)
+    # simulate a crash that left a *newer* torn snapshot behind
+    os.makedirs(os.path.join(str(tmp_path), "step_9.tmp"))
+    assert ck.list_steps() == [3]
+    assert ck.latest_step() == 3
+    # a fresh Checkpointer over the same dir sweeps it and still restores 3
+    ck2 = Checkpointer(str(tmp_path))
+    assert not os.path.exists(os.path.join(str(tmp_path), "step_9.tmp"))
+    got = ck2.restore(3, _state(0))
+    ref = _state(3)
+    assert np.array_equal(np.asarray(got["params"]["w"]),
+                          np.asarray(ref["params"]["w"]))
+
+
+# ---------------------------------------------------------------------------
+# block semantics: False / 'transfer' / True
+# ---------------------------------------------------------------------------
+
+def test_async_save_returns_before_write(tmp_path, monkeypatch):
+    """block=False must return while the npz write is still pending."""
+    gate = threading.Event()
+    entered = threading.Event()
+    real_savez = np.savez
+
+    def slow_savez(path, **arrays):
+        entered.set()
+        assert gate.wait(timeout=30), "writer never released"
+        real_savez(path, **arrays)
+
+    monkeypatch.setattr(ckpt_lib.np, "savez", slow_savez)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(1), block=False)  # returns with the writer gated
+    assert entered.wait(timeout=30)
+    assert ck.list_steps() == []  # nothing published yet
+    gate.set()
+    ck.wait()
+    assert ck.list_steps() == [1]
+    assert ck.latest_step() == 1
+
+
+def test_transfer_block_returns_before_write(tmp_path, monkeypatch):
+    """block='transfer' waits for host materialization but NOT the write —
+    the donation-safe point: the caller may reuse the device buffers."""
+    gate = threading.Event()
+    real_savez = np.savez
+
+    def slow_savez(path, **arrays):
+        assert gate.wait(timeout=30)
+        real_savez(path, **arrays)
+
+    monkeypatch.setattr(ckpt_lib.np, "savez", slow_savez)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(2, _state(2), block="transfer")  # must not deadlock on the gate
+    assert ck.list_steps() == []
+    gate.set()
+    ck.wait()
+    assert ck.list_steps() == [2]
+
+
+def test_blocking_save_round_trips_bitwise(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    state = _state(5)
+    ck.save(5, state, extra={"data": {"cursor": 17}}, block=True)
+    assert ck.latest_step() == 5
+    got = ck.restore(5, jax.tree.map(np.asarray, state))
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert ck.manifest(5)["extra"]["data"]["cursor"] == 17
+
+
+def test_async_save_round_trips_bitwise_after_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    state = _state(6)
+    ck.save(6, state, block=False)
+    ck.wait()
+    got = ck.restore(6, jax.tree.map(np.asarray, state))
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(state)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_save_joins_previous_inflight_save(tmp_path, monkeypatch):
+    """A second save never overtakes an in-flight one: save() joins first,
+    so snapshots publish in issue order."""
+    order = []
+    real_savez = np.savez
+
+    def tracking_savez(path, **arrays):
+        order.append(os.path.basename(os.path.dirname(path)))
+        real_savez(path, **arrays)
+
+    monkeypatch.setattr(ckpt_lib.np, "savez", tracking_savez)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(1), block=False)
+    ck.save(2, _state(2), block=False)
+    ck.wait()
+    assert order == ["step_1.tmp", "step_2.tmp"]
+    assert ck.list_steps() == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Writer-error propagation
+# ---------------------------------------------------------------------------
+
+def test_writer_error_surfaces_on_wait(tmp_path, monkeypatch):
+    def boom(path, **arrays):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt_lib.np, "savez", boom)
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _state(1), block=False)
+    with pytest.raises(OSError, match="disk full"):
+        ck.wait()
+    # the error is consumed — the checkpointer stays usable
+    ck.wait()
+    assert ck.list_steps() == []
+
+
+def test_writer_error_surfaces_on_transfer_block(tmp_path, monkeypatch):
+    """block='transfer' re-raises an error that happened before the
+    transfer barrier (e.g. a leaf that fails to materialize)."""
+
+    def boom(*a, **k):
+        raise RuntimeError("d2h failed")
+
+    monkeypatch.setattr(ckpt_lib.np, "asarray", boom)
+    ck = Checkpointer(str(tmp_path))
+    with pytest.raises(RuntimeError, match="d2h failed"):
+        ck.save(1, _state(1), block="transfer")
+
+
+# ---------------------------------------------------------------------------
+# Save policies: step cadence + wall-time cadence
+# ---------------------------------------------------------------------------
+
+def test_should_save_step_policy(tmp_path):
+    ck = Checkpointer(str(tmp_path), save_every_steps=10)
+    assert [s for s in range(1, 31) if ck.should_save(s)] == [10, 20, 30]
+
+
+def test_should_save_time_policy(tmp_path):
+    now = [0.0]
+    ck = Checkpointer(
+        str(tmp_path), save_every_seconds=60.0, clock=lambda: now[0])
+    assert not ck.should_save(1)
+    now[0] = 59.0
+    assert not ck.should_save(2)
+    now[0] = 61.0
+    assert ck.should_save(3)
+    # a save resets the clock origin
+    ck.save(3, _state(3), block=True)
+    assert not ck.should_save(4)
+    now[0] = 130.0
+    assert ck.should_save(5)
+
+
+def test_should_save_either_policy_fires(tmp_path):
+    now = [0.0]
+    ck = Checkpointer(
+        str(tmp_path), save_every_steps=100, save_every_seconds=30.0,
+        clock=lambda: now[0])
+    assert not ck.should_save(7)
+    assert ck.should_save(100)  # step cadence
+    now[0] = 31.0
+    assert ck.should_save(7)  # time cadence
+
+
+def test_maybe_save_respects_policy(tmp_path):
+    ck = Checkpointer(str(tmp_path), save_every_steps=2)
+    assert not ck.maybe_save(1, _state(1), block=True)
+    assert ck.maybe_save(2, _state(2), block=True)
+    assert ck.list_steps() == [2]
+
+
+def test_gc_keeps_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(s), block=True)
+    assert ck.list_steps() == [3, 4]
+    assert ck.latest_step() == 4
