@@ -1,0 +1,386 @@
+"""Trace-driven multi-tenant serving at scale (``repro.serving.tenants`` +
+``sla_autoscale``, DESIGN.md S17): goodput-under-SLA, per-tenant tail
+latency, and occupancy-vs-replica-count curves over pools of hundreds of
+slots.
+
+The scale rows run the ``fixedpoint_solve`` workload (per-query
+D-iteration solves certified by the paper's detection protocol): its
+per-tick device work is a cheap vmapped operator apply, so a 256-slot
+pool is tractable on CPU CI while exercising exactly the same engine /
+scheduler / termination / autoscaler control plane as LLM decode.  One
+mixed-workload :class:`~repro.serving.TenantScenario` row serves LLM
+decode and fixed-point tenants side by side and merges their per-tenant
+summaries.
+
+Rows (CSV on stdout: name,value,derived):
+
+- ``scale_sched_<sched>`` — a three-tenant mix (interactive ``chat`` with
+  a tight TTFT SLA, ``api`` with a looser one, quota'd no-SLA ``batch``)
+  under correlated burst arrivals at a big pool, per scheduler.  Carries
+  goodput-under-SLA and per-tenant p99 TTFT (ticks + ms).
+- ``scale_replicas_dp<k>`` — the occupancy-vs-replica-count curve: the
+  same traffic at fixed ``slots_per_replica`` and growing replica count
+  (capacity model: ``usable = min(slots, dp * slots_per_replica)``).
+- ``scale_static_peak`` / ``scale_autoscale`` — the ``sla_autoscale``
+  policy against a static deployment pinned at the autoscaler's
+  ``max_extent`` (equal peak replicas), on diurnal arrivals.  The
+  autoscaler must match the static goodput while spending strictly fewer
+  replica-ticks (the deterministic cost integral ``sum_t dp(t)``).
+- ``scale_mixed_scenario`` — LLM + fixed-point tenants through
+  :class:`TenantScenario`, merged per-tenant p99 TTFT/TPOT.
+
+Every gate compares tick-domain quantities (``sla_met`` counts TTFT
+deadlines in *ticks*, ``replica_ticks`` integrates the extent over the
+tick clock), so ``--check`` is a deterministic function of (tenants,
+arrival spec, seed) — wall-clock fields are reported but never gated.
+
+``--quick`` shrinks the pool/grid for CI smoke; ``--check`` asserts:
+sla_edf >= fcfs on SLA-met and goodput under burst; autoscale >= static
+goodput at equal peak replicas with fewer replica-ticks; more replicas
+never slow the drain (the replica curve's tick counts are monotone);
+no request lost anywhere; and every latency percentile reported by a
+non-empty run is finite — while an *empty* engine must report NaN
+percentiles, never a fake 0 ms (the summary bugfix this bench guards).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+import numpy as np
+
+from repro.serving import (
+    ServeConfig,
+    ServeEngine,
+    TenantScenario,
+    build_requests,
+    make_workload,
+    parse_tenant_specs,
+    quotas_of,
+)
+
+FP = "fixedpoint_solve"
+
+
+def make_fp(slots, dp, n, seed=0):
+    """Cheap, fast-converging solver pool (damping 0.6 -> ~20-tick solves
+    at eps 1e-3): the per-tick cost stays small at hundreds of slots."""
+    return make_workload(
+        FP, solver="d_iteration", n=n, dp=dp, slots=slots,
+        damping=0.6, seed=seed,
+    )
+
+
+def run_engine(wl, reqs, *, scheduler="sla_edf", dp=1, quotas=None,
+               spr=None, spd=4, eps=1e-3, autoscale=None):
+    """One deterministic serve run -> (engine, summary).
+
+    ``autoscale=(min_extent, max_extent)`` drives the engine through an
+    ElasticServeController under the ``sla_autoscale`` policy instead of
+    serving at a fixed extent.
+    """
+    wl.reset()
+    eng = ServeEngine(wl, ServeConfig(
+        scheduler=scheduler, termination="residual_interval", dp=dp,
+        eps=eps, quotas=quotas, slots_per_replica=spr,
+        steps_per_dispatch=spd,
+    ))
+    if autoscale is not None:
+        from repro.runtime import ElasticServeController
+        from repro.runtime.policies import SlaAutoscalePolicy
+
+        lo, hi = autoscale
+        ctl = ElasticServeController(
+            eng,
+            policy=SlaAutoscalePolicy(
+                min_extent=lo, max_extent=hi,
+                up_patience=1, down_patience=6, cooldown=4,
+            ),
+            min_extent=lo,
+        )
+        ctl.run(reqs)
+    else:
+        eng.run(reqs)
+    return eng, eng.summary()
+
+
+def max_wait(eng) -> int:
+    """Largest queue wait (ticks) any retired request experienced."""
+    return max(
+        (r.admit_tick - r.arrival for r in eng.results.values()), default=0
+    )
+
+
+def tenant_fields(s) -> dict:
+    out = {}
+    for name, t in sorted(s["tenants"].items()):
+        out[f"{name}_p99_ttft_ticks"] = round(t["ttft_p99_ticks"], 1)
+        out[f"{name}_p99_ttft_ms"] = round(t["ttft_p99_ms"], 2)
+        out[f"{name}_sla_met"] = t["sla_met"]
+        out[f"{name}_sla_total"] = t["sla_total"]
+    return out
+
+
+def goodput_fields(s) -> dict:
+    return {
+        "sla_met": s["sla_met"], "sla_total": s["sla_total"],
+        "goodput_ok": s["goodput_ok"],
+        "goodput_per_ktick": round(s["goodput_per_ktick"], 2),
+        "replica_ticks": s["replica_ticks"],
+        "goodput_per_replica_ktick": round(
+            s["goodput_ok"] / s["replica_ticks"] * 1000.0
+            if s["replica_ticks"] else 0.0, 3),
+    }
+
+
+def main(json_path="BENCH_scale.json", quick=False, check=False):
+    if quick:
+        slots, spr, n_fp = 32, 8, 120
+        dps, peak = (1, 2, 4), 4
+        n_mix, llm_slots = 20, 4
+    else:
+        slots, spr, n_fp = 256, 32, 240
+        dps, peak = (1, 2, 4, 8), 8
+        n_mix, llm_slots = 48, 8
+    n_req = 3 * slots  # three pool-fills of traffic: queues must form
+    seed = 0
+    rows = []
+
+    # --- empty-summary guard: NaN percentiles, never a fake 0 ms ----------
+    wl = make_fp(slots, dps[-1], n_fp, seed)
+    empty = ServeEngine(wl, ServeConfig(termination="residual_interval",
+                                        dp=dps[-1])).summary()
+    empty_nan = all(
+        math.isnan(empty[k])
+        for k in ("ttft_p50_ms", "ttft_p99_ms", "tpot_p50_ms", "tpot_p99_ms")
+    )
+    rows.append({
+        "name": "scale_empty_summary_nan", "value": int(empty_nan),
+        "note": "no-retirement percentiles are NaN, not 0 ms",
+    })
+
+    # --- scheduler sweep: tenant mix under correlated bursts --------------
+    # chat: interactive, tight TTFT SLA, high priority; api: looser SLA;
+    # batch: no SLA, admission quota (an eighth of the pool) so bursts of
+    # batch traffic cannot crowd out the interactive tenants.
+    sla_chat, sla_api = 8, 24  # ticks; solves run ~14, so waves 2+ contend
+    tenants = parse_tenant_specs(
+        f"chat:4:sla={sla_chat}:prio=2:gen=2000,"
+        f"api:2:sla={sla_api}:prio=1:gen=2000,"
+        f"batch:2:quota={slots // 8}:gen=2000"
+    )
+    for t in tenants:
+        assert t.workload == "llm_decode"  # default; retarget to fixedpoint
+    import dataclasses as _dc
+    tenants = tuple(_dc.replace(t, workload=FP) for t in tenants)
+    quotas = quotas_of(tenants)
+    # peak dumps a full pool of arrivals per tick for ~40 ticks: deep
+    # queues form, so which order the scheduler admits in decides how many
+    # TTFT deadlines survive — the regime the gate discriminates in
+    burst = f"bursty:{slots / 100:.2f},{slots:.2f},0.05,40"
+    reqs = build_requests(tenants, {FP: wl}, n_req, burst, seed + 7)[FP]
+
+    sched_sum = {}
+    sched_eng = {}
+    for sched in ("fcfs", "priority", "sla_edf"):
+        eng, s = run_engine(
+            wl, reqs, scheduler=sched, dp=peak // 2, quotas=quotas,
+        )
+        sched_sum[sched], sched_eng[sched] = s, eng
+        rows.append({
+            "name": f"scale_sched_{sched}", "workload": FP,
+            "scheduler": sched, "arrival": burst, "slots": slots,
+            "requests": n_req, "completed": s["completed"],
+            "ticks": s["ticks"], "occupancy": round(s["occupancy"], 3),
+            "max_wait_ticks": max_wait(eng),
+            "wall_s": round(s["wall_s"], 3),
+            **goodput_fields(s), **tenant_fields(s),
+        })
+
+    # --- occupancy vs replica count (capacity model) ----------------------
+    # Fixed slots_per_replica: each extent funds dp*spr usable slots out of
+    # the same physical pool, so the curve shows how replica count buys
+    # drain time and SLA headroom on identical traffic.
+    curve = {}
+    for dp in dps:
+        eng, s = run_engine(
+            wl, reqs, scheduler="sla_edf", dp=dp, quotas=quotas, spr=spr,
+        )
+        curve[dp] = s
+        rows.append({
+            "name": f"scale_replicas_dp{dp}", "workload": FP,
+            "dp": dp, "usable_slots": min(slots, dp * spr),
+            "slots": slots, "requests": n_req,
+            "completed": s["completed"], "ticks": s["ticks"],
+            "occupancy": round(s["occupancy"], 3),
+            "wall_s": round(s["wall_s"], 3),
+            **goodput_fields(s),
+        })
+
+    # --- autoscale vs static at equal peak replicas -----------------------
+    # Diurnal arrivals (two periods, valley start): the static deployment
+    # pays peak capacity all day; the autoscaler rides the wave.
+    period = 160 if quick else 400
+    peak_rate = (dps[-1] * spr) / 24.0
+    diurnal = f"diurnal:{peak_rate:.3f},{period},{peak_rate / 8:.3f}"
+    as_reqs = build_requests(tenants, {FP: wl}, n_req, diurnal, seed + 13)[FP]
+
+    eng_st, s_static = run_engine(
+        wl, as_reqs, scheduler="sla_edf", dp=peak, quotas=quotas,
+        spr=spr, spd=2,
+    )
+    rows.append({
+        "name": "scale_static_peak", "workload": FP, "dp": peak,
+        "arrival": diurnal, "requests": n_req,
+        "completed": s_static["completed"], "ticks": s_static["ticks"],
+        "occupancy": round(s_static["occupancy"], 3),
+        "wall_s": round(s_static["wall_s"], 3),
+        **goodput_fields(s_static), **tenant_fields(s_static),
+    })
+    eng_as, s_auto = run_engine(
+        wl, as_reqs, scheduler="sla_edf", dp=1, quotas=quotas,
+        spr=spr, spd=2, autoscale=(1, peak),
+    )
+    extents = [ev.new_dp for ev in eng_as.resizes]
+    rows.append({
+        "name": "scale_autoscale", "workload": FP,
+        "policy": "sla_autoscale", "arrival": diurnal,
+        "requests": n_req, "completed": s_auto["completed"],
+        "ticks": s_auto["ticks"], "resizes": s_auto["resizes"],
+        "peak_dp": max(extents, default=1), "final_dp": eng_as.dp,
+        "occupancy": round(s_auto["occupancy"], 3),
+        "wall_s": round(s_auto["wall_s"], 3),
+        **goodput_fields(s_auto), **tenant_fields(s_auto),
+    })
+
+    # --- mixed-workload TenantScenario (LLM decode + fixed-point) ---------
+    from repro.configs import registry
+    from repro.launch.train import build_mesh
+
+    cfg = registry.get_smoke_config("llama3.2-1b")
+    mesh = build_mesh(1, 1)
+    mix = parse_tenant_specs(
+        "chat:3:sla=8:prio=2:prompt=6:gen=10,"
+        "solve:2:sla=60:workload=fixedpoint_solve:gen=2000,"
+        "batch:1:quota=2:prompt=6:gen=16"
+    )
+    wl_llm = make_workload(
+        "llm_decode", cfg=cfg, mesh=mesh, slots=llm_slots, max_len=32,
+        max_prompt_len=8, seed=seed,
+    )
+    wl_fp2 = make_fp(16, 2, n_fp, seed)
+    mix_reqs = build_requests(
+        mix, {"llm_decode": wl_llm, FP: wl_fp2}, n_mix,
+        "bursty:0.3,2.0", seed + 29,
+    )
+    scenario = TenantScenario({
+        "llm_decode": ServeEngine(wl_llm, ServeConfig(
+            scheduler="sla_edf", termination="eos_maxlen",
+            quotas=quotas_of(mix),
+        )),
+        FP: ServeEngine(wl_fp2, ServeConfig(
+            scheduler="sla_edf", termination="residual_interval", dp=2,
+            eps=1e-3, quotas=quotas_of(mix),
+        )),
+    })
+    scenario.run(mix_reqs)
+    s_mix = scenario.summary()
+    mix_row = {
+        "name": "scale_mixed_scenario",
+        "workloads": "llm_decode+fixedpoint_solve",
+        "requests": n_mix, "completed": s_mix["completed"],
+        "ticks": s_mix["ticks"], "wall_s": round(s_mix["wall_s"], 3),
+        "ttft_p99_ms": round(s_mix["ttft_p99_ms"], 2),
+        "tpot_p99_ms": round(s_mix["tpot_p99_ms"], 3),
+        **goodput_fields(s_mix), **tenant_fields(s_mix),
+    }
+    rows.append(mix_row)
+
+    for r in rows:
+        val = r.get("goodput_per_ktick", r.get("value", ""))
+        print(f"{r['name']},{val},{r.get('sla_met', '')}")
+    payload = {
+        "meta": {
+            "workload": FP, "slots": slots, "slots_per_replica": spr,
+            "fp_n": n_fp, "requests": n_req, "peak_dp": peak,
+            "quick": quick,
+            "tenants": [t.name for t in tenants],
+            "gates": "tick-domain (sla_met / goodput_ok / replica_ticks)",
+        },
+        "sweep": rows,
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {json_path}")
+
+    if check:
+        assert empty_nan, (
+            f"empty-engine summary reported non-NaN percentiles: "
+            f"{ {k: empty[k] for k in ('ttft_p50_ms', 'tpot_p50_ms')} }"
+        )
+        # nothing lost anywhere
+        for s in (*sched_sum.values(), *curve.values(), s_static, s_auto):
+            assert s["completed"] == n_req, s
+        assert s_mix["completed"] == n_mix, s_mix
+        # finite percentiles on every non-empty run (NaN = hard failure)
+        for s in (*sched_sum.values(), *curve.values(), s_static, s_auto,
+                  s_mix):
+            for k in ("ttft_p50_ms", "ttft_p95_ms", "ttft_p99_ms"):
+                assert math.isfinite(s[k]), f"{k} is not finite: {s[k]}"
+        assert math.isfinite(s_mix["tpot_p99_ms"]), s_mix
+        # scheduler gate: EDF meets >= fcfs deadlines under burst, at no
+        # goodput cost, and its anti-starvation bound holds for batch
+        edf, fcfs = sched_sum["sla_edf"], sched_sum["fcfs"]
+        assert edf["sla_met"] >= fcfs["sla_met"], (
+            f"sla_edf met {edf['sla_met']} < fcfs {fcfs['sla_met']}"
+        )
+        assert edf["goodput_ok"] >= fcfs["goodput_ok"], (edf, fcfs)
+        bound = 64 + slots  # scheduler max_wait + one pool drain of slack
+        assert max_wait(sched_eng["sla_edf"]) <= bound, (
+            f"starvation: a request waited "
+            f"{max_wait(sched_eng['sla_edf'])} ticks (bound {bound})"
+        )
+        # replica curve: capacity must buy SLA headroom monotonically, and
+        # the full extent must drain the pool faster than the minimum one.
+        # (Adjacent tick counts need not be monotone: the termination
+        # agreement cycle lengthens with dp — more MRD stages per agreed
+        # retirement — which can offset one doubling's worth of slots.)
+        met = [curve[dp]["sla_met"] for dp in dps]
+        assert all(a <= b for a, b in zip(met, met[1:])), (
+            f"SLA-met not monotone over replica counts: {dict(zip(dps, met))}"
+        )
+        ticks = [curve[dp]["ticks"] for dp in dps]
+        assert ticks[0] > ticks[-1], (
+            f"dp={dps[-1]} did not drain faster than dp={dps[0]}: "
+            f"{dict(zip(dps, ticks))}"
+        )
+        # autoscale gate: >= static goodput at equal peak replicas, for
+        # strictly fewer replica-ticks
+        assert s_auto["goodput_ok"] >= s_static["goodput_ok"], (
+            f"autoscale goodput {s_auto['goodput_ok']} < static "
+            f"{s_static['goodput_ok']} at equal peak replicas"
+        )
+        assert s_auto["replica_ticks"] < s_static["replica_ticks"], (
+            f"autoscale spent {s_auto['replica_ticks']} replica-ticks vs "
+            f"static {s_static['replica_ticks']}"
+        )
+        assert max(extents, default=1) <= peak, extents
+        print(f"# sanity OK: sla_edf {edf['sla_met']}/{edf['sla_total']} "
+              f"vs fcfs {fcfs['sla_met']}/{fcfs['sla_total']} SLA under "
+              f"burst; autoscale {s_auto['goodput_ok']} goodput @ "
+              f"{s_auto['replica_ticks']} replica-ticks vs static "
+              f"{s_static['goodput_ok']} @ {s_static['replica_ticks']}; "
+              f"mixed scenario p99 TTFT {s_mix['ttft_p99_ms']:.1f} ms")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_scale.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced pool/grid (CI smoke)")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the tick-domain scale gates (CI)")
+    args = ap.parse_args()
+    main(json_path=args.json, quick=args.quick, check=args.check)

@@ -30,7 +30,9 @@ Rows (CSV on stdout: name,value,derived):
 JSON: writes BENCH_serve.json ({"sweep": [...], "meta": {...}}).
 
 ``--quick`` shrinks the grid for CI smoke; ``--check`` asserts the
-acceptance gates: continuous token throughput within 0.7x of static at
+acceptance gates: every reported latency percentile is finite (a NaN —
+the empty-run / single-token sentinel — or missing percentile is a hard
+failure, never a pass); continuous token throughput within 0.7x of static at
 the highest arrival rate (the wall-clock crossover is hardware-bound at
 smoke scale — the reference ratio is ~0.97x — so the gate guards gross
 regression); paged >= 1.5x concurrent requests per cache byte at >= 0.8x
@@ -45,6 +47,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import time
 
 import jax
@@ -529,6 +532,22 @@ def main(json_path="BENCH_serve.json", quick=False, check=False):
     print(f"# wrote {json_path}")
 
     if check:
+        # percentile integrity first: ServeEngine.summary() reports NaN —
+        # not a fake 0 ms — when nothing retired (or when TPOT has no
+        # inter-token interval), so a missing or non-finite percentile in
+        # any row is a hard failure, never a trivially-passing latency
+        for r in rows:
+            for k, v in r.items():
+                if k.endswith("_ms"):
+                    assert isinstance(v, float) and math.isfinite(v), (
+                        f"{r['name']}: percentile {k}={v!r} is not finite "
+                        f"(empty or single-token-only run leaked into a "
+                        f"latency gate)"
+                    )
+            if r.get("scheduler") and r["workload"] == "llm_decode":
+                for k in ("ttft_p50_ms", "ttft_p95_ms",
+                          "tpot_p50_ms", "tpot_p95_ms"):
+                    assert k in r, f"{r['name']} is missing percentile {k}"
         assert burst_tok_s is not None
         # The continuous-vs-static wall-clock crossover is hardware-bound
         # at smoke scale: the 64-dim model makes both loops host-limited,

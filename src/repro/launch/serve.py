@@ -30,12 +30,22 @@ under live traffic — no request lost, no slot re-prefilled:
       --continuous --slots 4 --requests 16 --arrival poisson:0.5 \\
       --dp 4 --elastic-policy grow_on_join --steps-per-dispatch 4 \\
       --kill 6:2 --join 16:4,5 --kill 26:0
+
+Multi-tenant traffic + SLA autoscaling (DESIGN.md S17): named tenants with
+TTFT SLAs / priorities / admission quotas, bursty or diurnal arrivals, and
+an autoscaler trading replica-funded capacity against SLA pressure:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \\
+      --continuous --slots 8 --requests 32 --scheduler sla_edf \\
+      --tenants "chat:3:sla=8:prio=2,batch:1:quota=4:gen=24" \\
+      --arrival bursty:0.2,2.0 --dp 2 --slots-per-replica 4 \\
+      --autoscale --max-extent 4 --steps-per-dispatch 4
 """
 
 from __future__ import annotations
 
 import argparse
-import json
+import dataclasses
 import time
 
 import jax
@@ -47,34 +57,31 @@ from repro.distributed import step as step_lib
 from repro.launch.train import build_mesh
 from repro.models import transformer
 from repro.serving import (
-    SCHEDULERS,
     TERMINATION,
     WORKLOADS,
     Request,
     ServeConfig,
     ServeEngine,
+    get_scheduler,
     make_workload,
+)
+from repro.serving.tenants import (
+    build_requests,
+    make_arrival_ticks,
+    parse_tenant_specs,
+    quotas_of,
 )
 
 
 def _arrival_ticks(spec: str, n: int, seed: int) -> list[int]:
-    """``none`` (all at t=0) | ``poisson:RATE`` (requests/tick) | ``trace:FILE``
-    (JSON list of arrival ticks)."""
-    if spec == "none":
-        return [0] * n
-    kind, _, arg = spec.partition(":")
-    if kind == "poisson":
-        rate = float(arg)
-        rng = np.random.default_rng(seed)
-        gaps = rng.exponential(1.0 / max(rate, 1e-9), size=n)
-        return np.floor(np.cumsum(gaps)).astype(int).tolist()
-    if kind == "trace":
-        with open(arg) as f:
-            ticks = json.load(f)
-        if len(ticks) < n:
-            raise SystemExit(f"trace {arg} has {len(ticks)} arrivals, need {n}")
-        return [int(t) for t in ticks[:n]]
-    raise SystemExit(f"unknown --arrival {spec!r} (none | poisson:R | trace:FILE)")
+    """``none`` | ``poisson:RATE`` | ``bursty:BASE,PEAK[,RATE,LEN]`` |
+    ``diurnal:PEAK,PERIOD[,FLOOR]`` | ``trace:FILE`` — see
+    :mod:`repro.serving.tenants` (this wrapper maps spec errors to CLI
+    exits and is what ``bench_serve.py`` imports)."""
+    try:
+        return make_arrival_ticks(spec, n, seed)
+    except (ValueError, OSError) as e:
+        raise SystemExit(f"--arrival {spec!r}: {e}")
 
 
 class _CliChaosScript:
@@ -162,7 +169,6 @@ def _static_main(args, cfg, mesh):
 
 def _continuous_main(args, cfg, mesh):
     rng = np.random.default_rng(args.seed)
-    arrivals = _arrival_ticks(args.arrival, args.requests, args.seed + 7)
 
     if args.workload in ("llm_decode", "llm_decode_paged"):
         max_len = args.max_len or (args.prompt_len + args.gen + 4)
@@ -179,16 +185,18 @@ def _continuous_main(args, cfg, mesh):
             **kw,
         )
         termination = args.termination or "eos_maxlen"
-        reqs = [
-            Request(
-                id=i, arrival=arrivals[i],
-                prompt=rng.integers(0, cfg.vocab, size=int(rng.integers(1, args.prompt_len + 1))),
-                max_new=int(rng.integers(max(1, args.gen // 2), args.gen + 1)),
-                priority=int(rng.integers(0, 3)),
-                sla=int(rng.integers(4, 64)),
-            )
-            for i in range(args.requests)
-        ]
+        if not args.tenants:
+            arrivals = _arrival_ticks(args.arrival, args.requests, args.seed + 7)
+            reqs = [
+                Request(
+                    id=i, arrival=arrivals[i],
+                    prompt=rng.integers(0, cfg.vocab, size=int(rng.integers(1, args.prompt_len + 1))),
+                    max_new=int(rng.integers(max(1, args.gen // 2), args.gen + 1)),
+                    priority=int(rng.integers(0, 3)),
+                    sla=int(rng.integers(4, 64)),
+                )
+                for i in range(args.requests)
+            ]
     else:
         n = ((args.n + args.dp - 1) // args.dp) * args.dp  # dp-block divisible
         if n != args.n:
@@ -199,27 +207,54 @@ def _continuous_main(args, cfg, mesh):
             slots=args.slots, dp=args.dp,
         )
         termination = args.termination or "residual_interval"
-        reqs = []
-        for i in range(args.requests):
-            v = rng.random(args.n).astype(np.float32)
-            reqs.append(Request(
-                id=i, arrival=arrivals[i], payload=v / v.sum(),
-                max_new=args.gen, priority=int(rng.integers(0, 3)),
-                sla=int(rng.integers(50, 500)),
-            ))
+        if not args.tenants:
+            arrivals = _arrival_ticks(args.arrival, args.requests, args.seed + 7)
+            reqs = []
+            for i in range(args.requests):
+                v = rng.random(args.n).astype(np.float32)
+                reqs.append(Request(
+                    id=i, arrival=arrivals[i], payload=v / v.sum(),
+                    max_new=args.gen, priority=int(rng.integers(0, 3)),
+                    sla=int(rng.integers(50, 500)),
+                ))
+
+    quotas = None
+    if args.tenants:
+        try:
+            tenants = parse_tenant_specs(args.tenants)
+        except ValueError as e:
+            raise SystemExit(f"--tenants: {e}")
+        # single-engine CLI: every tenant targets the deployed --workload
+        # (mixed-workload scenarios live in TenantScenario / bench_scale)
+        tenants = tuple(
+            dataclasses.replace(t, workload=args.workload) for t in tenants
+        )
+        reqs = build_requests(
+            tenants, {args.workload: wl}, args.requests,
+            args.arrival, args.seed + 7,
+        )[args.workload]
+        quotas = quotas_of(tenants)
 
     eng = ServeEngine(wl, ServeConfig(
         scheduler=args.scheduler, termination=termination,
         dp=args.dp, eps=args.eps, max_retries=args.max_retries,
         steps_per_dispatch=args.steps_per_dispatch,
+        quotas=quotas,
+        slots_per_replica=args.slots_per_replica or None,
     ))
     script = _parse_chaos(args)
-    if args.elastic_policy or script is not None:
+    if args.autoscale or args.elastic_policy or script is not None:
         from repro.runtime import ElasticServeController
 
+        policy = args.elastic_policy or "grow_on_join"
+        if args.autoscale:
+            from repro.runtime.policies import SlaAutoscalePolicy
+
+            policy = SlaAutoscalePolicy(
+                min_extent=args.min_extent, max_extent=args.max_extent,
+            )
         ctl = ElasticServeController(
-            eng, policy=args.elastic_policy or "grow_on_join",
-            min_extent=args.min_extent,
+            eng, policy=policy, min_extent=args.min_extent,
         )
         res = ctl.run(reqs, events=script)
         for ev in ctl.resizes:
@@ -234,6 +269,14 @@ def _continuous_main(args, cfg, mesh):
           f"{s['occupancy']:.2f} | converged {s['converged']}/{s['completed']}")
     print(f"  TTFT p50/p95 {s['ttft_p50_ms']:.1f}/{s['ttft_p95_ms']:.1f} ms | "
           f"TPOT p50/p95 {s['tpot_p50_ms']:.2f}/{s['tpot_p95_ms']:.2f} ms")
+    if s["sla_total"]:
+        print(f"  SLA {s['sla_met']}/{s['sla_total']} met | goodput "
+              f"{s['goodput_ok']} ({s['goodput_per_ktick']:.1f}/ktick) | "
+              f"replica-ticks {s['replica_ticks']}")
+    for name, t in sorted(s["tenants"].items()):
+        print(f"  tenant {name}: {t['completed']} done, {t['tokens_out']} tok "
+              f"| sla {t['sla_met']}/{t['sla_total']} | "
+              f"ttft p99 {t['ttft_p99_ticks']:.0f} ticks")
     if s["resizes"] or s["retried"]:
         print(f"  resizes {s['resizes']} | capacity retries {s['retried']} "
               f"| final dp {eng.dp}")
@@ -265,12 +308,20 @@ def main(argv=None):
                     help="serve through the continuous-batching ServeEngine")
     ap.add_argument("--slots", type=int, default=4, help="decode pool slots")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--scheduler", default="fcfs", choices=sorted(SCHEDULERS))
+    ap.add_argument("--scheduler", default="fcfs",
+                    help="SCHEDULERS entry, optionally parameterized "
+                         "(fcfs | priority | sla_edf | sla_edf:MAX_WAIT)")
     ap.add_argument("--workload", default="llm_decode", choices=sorted(WORKLOADS))
     ap.add_argument("--termination", default=None, choices=sorted(TERMINATION),
                     help="default: eos_maxlen (llm) / residual_interval (fixedpoint)")
     ap.add_argument("--arrival", default="none",
-                    help="none | poisson:RATE (req/tick) | trace:FILE (JSON ticks)")
+                    help="none | poisson:RATE (req/tick) | "
+                         "bursty:BASE,PEAK[,RATE,LEN] | "
+                         "diurnal:PEAK,PERIOD[,FLOOR] | trace:FILE (JSON ticks)")
+    ap.add_argument("--tenants", default=None,
+                    metavar="NAME:WEIGHT[:sla=..][:prio=..][:quota=..][:gen=..],...",
+                    help="multi-tenant traffic model (serving/tenants.py); "
+                         "requests are sampled per tenant instead of i.i.d.")
     ap.add_argument("--max-len", type=int, default=0,
                     help="pool cache length (0 = prompt+gen+margin)")
     ap.add_argument("--block-size", type=int, default=8,
@@ -295,6 +346,16 @@ def main(argv=None):
                          "(ELASTIC_POLICIES entry, e.g. grow_on_join)")
     ap.add_argument("--min-extent", type=int, default=1,
                     help="never shrink below this many replicas")
+    # SLA autoscaling (DESIGN.md S17)
+    ap.add_argument("--autoscale", action="store_true",
+                    help="drive the engine with the sla_autoscale policy "
+                         "(queue/SLA pressure grows, idle shrinks)")
+    ap.add_argument("--max-extent", type=int, default=8,
+                    help="autoscaler: never grow beyond this many replicas")
+    ap.add_argument("--slots-per-replica", type=int, default=0,
+                    help="capacity model: each replica funds this many pool "
+                         "slots, so resizes change admission capacity "
+                         "(0 = all slots usable at any extent)")
     ap.add_argument("--kill", action="append", metavar="TICK:REPLICA[:silent]",
                     help="kill a replica at TICK (repeatable); ':silent' "
                          "waits for the virtual heartbeat timeout")
@@ -305,6 +366,10 @@ def main(argv=None):
     ap.add_argument("--unstall", action="append", metavar="TICK:REPLICA")
     args = ap.parse_args(argv)
 
+    try:
+        get_scheduler(args.scheduler)
+    except ValueError as e:
+        raise SystemExit(str(e))
     needs_model = not (args.continuous and args.workload == "fixedpoint_solve")
     cfg = None
     if needs_model:

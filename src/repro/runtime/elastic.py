@@ -56,7 +56,12 @@ from repro.runtime.fault_tolerance import (
     grow_mesh,
     shrink_mesh,
 )
-from repro.runtime.policies import ResizeDecision, clamp_min_extent, get_policy
+from repro.runtime.policies import (
+    LoadSnapshot,
+    ResizeDecision,
+    clamp_min_extent,
+    get_policy,
+)
 
 
 def _dp_axes(mesh) -> tuple[str, ...]:
@@ -195,7 +200,9 @@ class ElasticServeController:
                 f"{len(ids)} replica ids for a dp={engine.dp} engine"
             )
         self.replicas = ReplicaSet(ids)
-        self.policy = get_policy(policy)
+        # spawn(): stateful policies (sla_autoscale hysteresis) get a
+        # per-controller instance instead of the shared registry singleton
+        self.policy = get_policy(policy).spawn()
         self.clock = clock or StepClock()
         self.detector = FailureDetector(
             ids, heartbeat or HeartbeatConfig(), now=self.clock.now()
@@ -239,6 +246,32 @@ class ElasticServeController:
             )
             self.detector.heartbeat(r, now=now, step_time=step_time)
 
+    def _load(self) -> LoadSnapshot:
+        """Deterministic tick-domain load picture for autoscaling policies:
+        queue depth, TTFT-SLA pressure (near = past half the deadline while
+        still queued), and free capacity under the engine's
+        ``slots_per_replica`` model."""
+        eng = self.engine
+        tick = eng.tick
+        near = overdue = 0
+        for r in eng.queue:
+            if r.sla is None:
+                continue
+            waited = tick - r.arrival
+            if waited > r.sla:
+                overdue += 1
+            elif 2 * waited >= r.sla:
+                near += 1
+        return LoadSnapshot(
+            tick=tick,
+            queue_depth=len(eng.queue),
+            sla_near=near,
+            sla_overdue=overdue,
+            free_slots=len(eng._free_slots()),
+            usable_slots=eng.usable_slots,
+            dp=eng.dp,
+        )
+
     # -- one controller step -------------------------------------------------
 
     def step(self, events=None) -> np.ndarray:
@@ -251,6 +284,7 @@ class ElasticServeController:
         decision = self.policy.decide(
             self.detector, now, self.pending_joins,
             frozenset(self.replicas.ids),
+            load=self._load(),
         )
         clamped = clamp_min_extent(
             decision, self.replicas.ids, self.min_extent

@@ -24,12 +24,20 @@ flag resolve by name).
 - ``drain_straggler``: ``shrink_on_failure`` plus eviction of workers
   whose step times exceed the heartbeat straggler rule — a slow-but-alive
   worker is drained instead of throttling the whole DP group.
+- ``sla_autoscale``: ``shrink_on_failure`` plus load-driven grow/shrink
+  for serving (DESIGN.md S17): the controller hands the policy a
+  :class:`LoadSnapshot` (queue depth, TTFT-SLA pressure, free capacity)
+  and the policy trades replica count against SLA risk with scale-up
+  hysteresis, a post-resize cooldown, and min/max-extent clamps.
+  Stateful — resolve via :meth:`ElasticPolicy.spawn` (as
+  ``ElasticServeController`` does) so concurrent deployments never share
+  hysteresis counters through the registry singleton.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence
+from typing import Dict, Optional, Sequence
 
 from repro.runtime.fault_tolerance import FailureDetector
 
@@ -42,6 +50,24 @@ class ResizeDecision:
     remove: frozenset = frozenset()  # device ids to drop (shrink/abort)
     admit: tuple = ()  # device ids to add (grow)
     reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadSnapshot:
+    """Serving-load picture handed to autoscaling policies each step.
+
+    Built by ``ElasticServeController`` from the engine: tick-domain and
+    deterministic, so autoscaling decisions replay bit-identically for a
+    given trace (what the bench gates rely on).
+    """
+
+    tick: int  # engine tick the snapshot was taken at
+    queue_depth: int = 0  # pending requests (arrived, not admitted)
+    sla_near: int = 0  # queued SLA requests past half their deadline
+    sla_overdue: int = 0  # queued SLA requests past their deadline
+    free_slots: int = 0  # usable slots with no active request
+    usable_slots: int = 0  # min(slots, dp * slots_per_replica)
+    dp: int = 1  # live replica extent
 
 
 ELASTIC_POLICIES: Dict[str, "ElasticPolicy"] = {}
@@ -108,8 +134,15 @@ class ElasticPolicy:
         now: float,
         pending_joins: Sequence[int],
         mesh_device_ids: frozenset,
+        load: Optional[LoadSnapshot] = None,
     ) -> ResizeDecision:
         raise NotImplementedError
+
+    def spawn(self) -> "ElasticPolicy":
+        """Per-deployment instance.  Stateless policies return themselves
+        (the registry singleton is fine to share); stateful ones override
+        to return a fresh copy so hysteresis never leaks across users."""
+        return self
 
     def _confirmed_failures(self, detector, now, mesh_device_ids):
         return frozenset(w for w in detector.failed(now) if w in mesh_device_ids)
@@ -117,7 +150,7 @@ class ElasticPolicy:
 
 @register_policy("static")
 class StaticPolicy(ElasticPolicy):
-    def decide(self, detector, now, pending_joins, mesh_device_ids):
+    def decide(self, detector, now, pending_joins, mesh_device_ids, load=None):
         failed = self._confirmed_failures(detector, now, mesh_device_ids)
         if failed:
             return ResizeDecision(
@@ -129,7 +162,7 @@ class StaticPolicy(ElasticPolicy):
 
 @register_policy("shrink_on_failure")
 class ShrinkOnFailurePolicy(ElasticPolicy):
-    def decide(self, detector, now, pending_joins, mesh_device_ids):
+    def decide(self, detector, now, pending_joins, mesh_device_ids, load=None):
         failed = self._confirmed_failures(detector, now, mesh_device_ids)
         if failed:
             return ResizeDecision(
@@ -141,7 +174,7 @@ class ShrinkOnFailurePolicy(ElasticPolicy):
 
 @register_policy("grow_on_join")
 class GrowOnJoinPolicy(ShrinkOnFailurePolicy):
-    def decide(self, detector, now, pending_joins, mesh_device_ids):
+    def decide(self, detector, now, pending_joins, mesh_device_ids, load=None):
         d = super().decide(detector, now, pending_joins, mesh_device_ids)
         if d.action != "none":
             return d
@@ -155,7 +188,7 @@ class GrowOnJoinPolicy(ShrinkOnFailurePolicy):
 
 @register_policy("drain_straggler")
 class DrainStragglerPolicy(ShrinkOnFailurePolicy):
-    def decide(self, detector, now, pending_joins, mesh_device_ids):
+    def decide(self, detector, now, pending_joins, mesh_device_ids, load=None):
         d = super().decide(detector, now, pending_joins, mesh_device_ids)
         if d.action != "none":
             return d
@@ -166,4 +199,120 @@ class DrainStragglerPolicy(ShrinkOnFailurePolicy):
             return ResizeDecision(
                 "shrink", remove=slow, reason=f"straggler drain: {sorted(slow)}"
             )
+        return ResizeDecision()
+
+
+@register_policy("sla_autoscale")
+class SlaAutoscalePolicy(ShrinkOnFailurePolicy):
+    """SLA-pressure autoscaler for serving deployments (DESIGN.md S17).
+
+    State machine per :meth:`decide` (after the inherited failure shrink,
+    which always wins):
+
+    - **pressure** = queued work the current capacity cannot absorb:
+      overdue/near-deadline SLA requests, or queue depth beyond the free
+      usable slots.  ``up_patience`` consecutive pressured steps outside
+      the cooldown window grow by one replica (joiner id ``max(live)+1``
+      — the controller admits synthesized ids).
+    - **idle** = no queue, no SLA risk, and at least one replica's worth
+      of free slots to spare.  ``down_patience`` consecutive idle steps
+      shrink by one (the highest live id), never below ``min_extent``.
+    - any resize arms ``cooldown`` ticks during which both counters are
+      held at zero — scale-up hysteresis, so a single burst tick cannot
+      thrash the extent.
+
+    Thresholds are tick-domain integers off the injected clock, so a
+    replayed trace autoscales identically every run.
+    """
+
+    def __init__(
+        self,
+        *,
+        min_extent: int = 1,
+        max_extent: int = 8,
+        up_patience: int = 2,
+        down_patience: int = 8,
+        cooldown: int = 8,
+        queue_per_replica: int = 0,
+    ):
+        if min_extent < 1 or max_extent < min_extent:
+            raise ValueError(
+                f"need 1 <= min_extent <= max_extent, got "
+                f"{min_extent}..{max_extent}"
+            )
+        self.min_extent = min_extent
+        self.max_extent = max_extent
+        self.up_patience = up_patience
+        self.down_patience = down_patience
+        self.cooldown = cooldown
+        # extra queue slack tolerated per live replica before it counts as
+        # pressure (0 = any queue beyond the free slots is pressure)
+        self.queue_per_replica = queue_per_replica
+        self._up = 0
+        self._down = 0
+        self._cool_until = -1
+
+    def spawn(self):
+        return SlaAutoscalePolicy(
+            min_extent=self.min_extent, max_extent=self.max_extent,
+            up_patience=self.up_patience, down_patience=self.down_patience,
+            cooldown=self.cooldown, queue_per_replica=self.queue_per_replica,
+        )
+
+    def _pressure(self, load: LoadSnapshot) -> bool:
+        slack = self.queue_per_replica * load.dp
+        return (
+            load.sla_overdue > 0
+            or load.sla_near > 0
+            or load.queue_depth > load.free_slots + slack
+        )
+
+    def _idle(self, load: LoadSnapshot) -> bool:
+        per_replica = max(1, load.usable_slots // max(1, load.dp))
+        return (
+            load.queue_depth == 0
+            and load.sla_near == 0
+            and load.sla_overdue == 0
+            and load.free_slots >= per_replica
+        )
+
+    def decide(self, detector, now, pending_joins, mesh_device_ids, load=None):
+        d = super().decide(detector, now, pending_joins, mesh_device_ids)
+        if d.action != "none":
+            self._up = self._down = 0
+            self._cool_until = now + self.cooldown
+            return d
+        if load is None:  # not a serving controller: behave as the parent
+            return d
+        if load.tick < self._cool_until:
+            self._up = self._down = 0
+            return ResizeDecision(reason="autoscale: cooldown")
+        live = sorted(mesh_device_ids)
+        if self._pressure(load):
+            self._down = 0
+            self._up += 1
+            if self._up >= self.up_patience and len(live) < self.max_extent:
+                self._up = 0
+                self._cool_until = load.tick + self.cooldown
+                joiner = (max(live) + 1) if live else 0
+                return ResizeDecision(
+                    "grow", admit=(joiner,),
+                    reason=(
+                        f"autoscale up: queue={load.queue_depth} "
+                        f"near={load.sla_near} overdue={load.sla_overdue} "
+                        f"at dp={load.dp}"
+                    ),
+                )
+        elif self._idle(load):
+            self._up = 0
+            self._down += 1
+            if self._down >= self.down_patience and len(live) > self.min_extent:
+                self._down = 0
+                self._cool_until = load.tick + self.cooldown
+                return ResizeDecision(
+                    "shrink", remove=frozenset({max(live)}),
+                    reason=f"autoscale down: idle at dp={load.dp}",
+                )
+        else:
+            self._up = self._down = 0
         return ResizeDecision()

@@ -11,6 +11,7 @@ registries, one engine composing them —
 | termination | ``serving/termination.py`` | ``TERMINATION`` |
 | workloads | ``serving/workloads.py`` | ``WORKLOADS`` |
 | engine | ``serving/engine.py`` | composes the four |
+| tenants | ``serving/tenants.py`` | ``ARRIVALS`` (traffic model, S17) |
 
 The load-bearing idea: deciding *when each in-flight request is done*
 without a global barrier is the paper's distributed convergence-detection
@@ -34,6 +35,16 @@ from repro.serving.schedulers import (  # noqa: F401
     SCHEDULERS,
     get_scheduler,
     register_scheduler,
+)
+from repro.serving.tenants import (  # noqa: F401
+    ARRIVALS,
+    TenantScenario,
+    TenantSpec,
+    build_requests,
+    make_arrival_ticks,
+    parse_tenant_specs,
+    quotas_of,
+    register_arrival,
 )
 from repro.serving.termination import (  # noqa: F401
     TERMINATION,

@@ -50,8 +50,9 @@ class Request:
     max_new: int = 32  # generation budget / iteration budget
     eos: int = -1  # llm_decode: EOS token id (-1 = never)
     priority: int = 0  # 'priority' scheduler: higher first
-    sla: Optional[int] = None  # 'sla_edf' scheduler: deadline = arrival + sla
+    sla: Optional[int] = None  # TTFT SLA in ticks: deadline = arrival + sla
     eps: Optional[float] = None  # residual protocols: per-request threshold
+    tenant: str = ""  # multi-tenant traffic model (serving/tenants.py)
 
 
 @dataclasses.dataclass
@@ -65,8 +66,11 @@ class RequestResult:
     certified: float  # agreed value at retirement (residual / done bit)
     converged: bool  # False only for budget-forced fixed-point retirement
     ttft_s: float
-    tpot_s: float
+    tpot_s: float  # NaN for n_tokens <= 1 (no inter-token interval exists)
     retries: int = 0  # capacity-forced requeues this request went through
+    tenant: str = ""
+    sla: Optional[int] = None
+    sla_met: Optional[bool] = None  # TTFT tick deadline met (None = no SLA)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,6 +90,16 @@ class ServeConfig:
     # and the host caps it at the next pending arrival, so larger values
     # only amortize host overhead — they never delay scheduling decisions
     steps_per_dispatch: int = 16
+    # multi-tenant admission quotas: {tenant name: max in-flight slots}
+    # (0 / absent = unlimited); enforced at admission, so a tenant at its
+    # quota is passed over and the slot goes to the next eligible request
+    quotas: Any = None
+    # capacity model for SLA autoscaling: each agreement replica funds
+    # this many pool slots, so only min(slots, dp * slots_per_replica)
+    # slots accept admissions — ServeEngine.resize() therefore changes
+    # serving capacity, which is what the autoscaler trades against SLA
+    # pressure.  None = every slot usable at any extent (the old model).
+    slots_per_replica: Optional[int] = None
 
 
 class ServeEngine:
@@ -135,11 +149,13 @@ class ServeEngine:
         self._eps = np.full((self.slots,), cfg.eps, np.float32)
         self._t_queue = np.zeros((self.slots,), np.float64)
         self._t_first = np.zeros((self.slots,), np.float64)
+        self._quotas = dict(cfg.quotas or {})
         # metrics accumulators
         self._occupancy_ticks = 0
         self._occupancy_sum = 0.0
         self._forced_at_capacity = 0
         self._retried = 0
+        self._replica_ticks = 0  # sum of dp over every clock tick passed
         self._t_start: Optional[float] = None
         self._t_last = 0.0
 
@@ -267,8 +283,22 @@ class ServeEngine:
     def active(self) -> np.ndarray:
         return self._active
 
+    @property
+    def usable_slots(self) -> int:
+        """Slots currently funded by the replica extent (capacity model).
+
+        With ``cfg.slots_per_replica`` set, a shrink stops *admissions*
+        into the defunded tail slots — in-flight requests there drain
+        naturally (nothing is preempted), then the slots idle until a
+        grow refunds them.
+        """
+        spr = self.cfg.slots_per_replica
+        return self.slots if not spr else min(self.slots, self.dp * spr)
+
     def _free_slots(self) -> List[int]:
-        return [s for s in range(self.slots) if self.slot_req[s] is None]
+        return [
+            s for s in range(self.usable_slots) if self.slot_req[s] is None
+        ]
 
     def _commit(self, tree):
         """Pin replicated control/termination state to the workload's mesh.
@@ -407,15 +437,35 @@ class ServeEngine:
                 still.append(r)
         self.pending = still
 
-        # 1. admit
+        # 1. admit: walk the scheduler's order, filling free slots with the
+        # first *eligible* requests — a request blocked by its tenant quota
+        # or the cache-block budget is passed over (it stays queued) and
+        # the slot goes to the next request instead of idling a tick
         free = self._free_slots()
         if self.cfg.max_admit_per_tick:
             free = free[: self.cfg.max_admit_per_tick]
         gate = getattr(self.workload, "can_admit", None)
-        for req, slot in self.scheduler.select(self.queue, free, now):
+        inflight: Dict[str, int] = {}
+        if self._quotas:
+            for r in self.slot_req:
+                if r is not None:
+                    inflight[r.tenant] = inflight.get(r.tenant, 0) + 1
+        ordered = (
+            self.scheduler.order(list(self.queue), now)
+            if self.queue and free else []
+        )
+        for req in ordered:
+            if not free:
+                break
+            quota = self._quotas.get(req.tenant, 0)
+            if quota and inflight.get(req.tenant, 0) >= quota:
+                continue  # tenant at its admission quota: req stays queued
             if gate is not None and not gate(req):
                 continue  # out of cache blocks: req waits in the queue
+            slot = free.pop(0)
             self.queue.remove(req)
+            if self._quotas:
+                inflight[req.tenant] = inflight.get(req.tenant, 0) + 1
             t0 = time.perf_counter()
             self.workload.admit(req, slot, now)
             self.slot_req[slot] = req
@@ -437,6 +487,9 @@ class ServeEngine:
                 min(r.arrival for r in self.pending)
                 if self.pending else now + 1
             )
+            # provisioned-but-idle replicas still cost replica-ticks —
+            # that is exactly the waste the autoscaler exists to shed
+            self._replica_ticks += (self.tick - now) * self.dp
             self._t_last = time.perf_counter()
             return np.zeros((self.slots,), bool)
 
@@ -501,6 +554,7 @@ class ServeEngine:
                               bool(forced[slot]), t_done,
                               at_capacity=bool(at_cap[slot]))
         self.tick = now + n_ticks
+        self._replica_ticks += n_ticks * self.dp
         self._t_last = time.perf_counter()
         return out_mask
 
@@ -532,17 +586,31 @@ class ServeEngine:
             out = toks
             n_tok = int(out.shape[0])
         ttft = self._t_first[slot] - self._t_queue[slot]
-        tpot = (t_done - self._t_first[slot]) / max(1, n_tok - 1)
+        # a single-token completion has no inter-token interval: reporting
+        # 0.0 s here dragged TPOT percentiles down in mixed-length traffic,
+        # so it is NaN and summary() excludes it from the percentiles
+        tpot = (
+            (t_done - self._t_first[slot]) / (n_tok - 1)
+            if n_tok > 1 else float("nan")
+        )
+        admit_tick = int(self._admit_tick[slot])
+        # TTFT SLA is tick-domain (deterministic): first token no later
+        # than `sla` ticks after the request became schedulable
+        sla_met = (
+            None if req.sla is None
+            else bool(admit_tick - req.arrival <= req.sla)
+        )
         # the protocol's per-slot certified latch is only written on
         # protocol retirement; a budget-forced request must not inherit the
         # value its slot's *previous* occupant certified at
         cert = RES_INIT if was_forced else float(certified[slot])
         self.results[req.id] = RequestResult(
             id=req.id, output=out, arrival=req.arrival,
-            admit_tick=int(self._admit_tick[slot]), retire_tick=now,
+            admit_tick=admit_tick, retire_tick=now,
             n_tokens=n_tok, certified=cert,
             converged=not was_forced, ttft_s=ttft, tpot_s=tpot,
             retries=getattr(req, "_retries", 0),
+            tenant=req.tenant, sla=req.sla, sla_met=sla_met,
         )
         self.slot_req[slot] = None
         rel = getattr(self.workload, "release", None)
@@ -574,8 +642,6 @@ class ServeEngine:
     def summary(self) -> Dict[str, Any]:
         res = list(self.results.values())
         wall = (self._t_last - self._t_start) if self._t_start else 0.0
-        ttft = np.asarray([r.ttft_s for r in res]) if res else np.zeros(1)
-        tpot = np.asarray([r.tpot_s for r in res]) if res else np.zeros(1)
         return {
             "completed": len(res),
             "ticks": self.tick,
@@ -584,16 +650,85 @@ class ServeEngine:
             "throughput_tok_s": (
                 sum(r.n_tokens for r in res) / wall if wall > 0 else 0.0
             ),
-            "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
-            "ttft_p95_ms": float(np.percentile(ttft, 95) * 1e3),
-            "tpot_p50_ms": float(np.percentile(tpot, 50) * 1e3),
-            "tpot_p95_ms": float(np.percentile(tpot, 95) * 1e3),
+            # percentiles are NaN — never a fake 0 ms — when no request
+            # retired (or, for TPOT, when every completion was single-token
+            # and carries no inter-token interval); bench `--check` gates
+            # treat a NaN percentile as a hard failure, not a pass
+            **_latency_percentiles(res),
             "occupancy": (
                 self._occupancy_sum / self._occupancy_ticks
                 if self._occupancy_ticks else 0.0
             ),
+            **_sla_fields(res, self.tick, wall),
+            "replica_ticks": self._replica_ticks,
+            "tenants": _tenant_summaries(res),
             "converged": int(sum(r.converged for r in res)),
             "forced_at_capacity": self._forced_at_capacity,
             "retried": self._retried,
             "resizes": len(self.resizes),
         }
+
+
+def _pct_ms(seconds: np.ndarray, q: float) -> float:
+    """NaN-safe percentile in milliseconds (NaN when nothing to rank)."""
+    finite = seconds[np.isfinite(seconds)]
+    return float(np.percentile(finite, q) * 1e3) if finite.size else float("nan")
+
+
+def _latency_percentiles(res) -> Dict[str, float]:
+    ttft = np.asarray([r.ttft_s for r in res], np.float64)
+    tpot = np.asarray([r.tpot_s for r in res], np.float64)
+    out = {}
+    for q in (50, 95, 99):
+        out[f"ttft_p{q}_ms"] = _pct_ms(ttft, q)
+        out[f"tpot_p{q}_ms"] = _pct_ms(tpot, q)
+    return out
+
+
+def _sla_fields(res, ticks: int, wall: float) -> Dict[str, Any]:
+    """Goodput under SLA.  ``sla_met`` counts requests whose tick-domain
+    TTFT met their deadline (over the ``sla_total`` that carry one);
+    ``goodput_ok`` adds completed no-SLA (batch) requests, and the rates
+    divide by elapsed ticks (deterministic — what the CI gates compare)
+    and wall seconds."""
+    sla_total = sum(1 for r in res if r.sla is not None)
+    sla_met = sum(1 for r in res if r.sla_met)
+    goodput_ok = sla_met + (len(res) - sla_total)
+    return {
+        "sla_total": sla_total,
+        "sla_met": sla_met,
+        "goodput_ok": goodput_ok,
+        "goodput_per_ktick": (
+            goodput_ok / ticks * 1000.0 if ticks > 0 else 0.0
+        ),
+        "goodput_req_s": goodput_ok / wall if wall > 0 else 0.0,
+    }
+
+
+def _tenant_summaries(res) -> Dict[str, Dict[str, Any]]:
+    """Per-tenant breakdown (empty when the traffic is untenanted)."""
+    by: Dict[str, list] = {}
+    for r in res:
+        by.setdefault(r.tenant, []).append(r)
+    if set(by) <= {""}:
+        return {}
+    out = {}
+    for name in sorted(by):
+        rs = by[name]
+        ttft_ticks = np.asarray(
+            [r.admit_tick - r.arrival for r in rs], np.float64
+        )
+        sla_total = sum(1 for r in rs if r.sla is not None)
+        sla_met = sum(1 for r in rs if r.sla_met)
+        out[name] = {
+            "completed": len(rs),
+            "tokens_out": int(sum(r.n_tokens for r in rs)),
+            "sla_total": sla_total,
+            "sla_met": sla_met,
+            "goodput_ok": sla_met + (len(rs) - sla_total),
+            "ttft_p99_ticks": (
+                float(np.percentile(ttft_ticks, 99)) if rs else float("nan")
+            ),
+            **_latency_percentiles(rs),
+        }
+    return out

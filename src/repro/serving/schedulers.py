@@ -14,16 +14,27 @@ Registered schedulers:
   classic two-class serving split (interactive vs batch).
 - ``sla_edf`` — earliest deadline first over ``Request.arrival +
   Request.sla`` (requests without an SLA sort last, FCFS among
-  themselves); the canonical latency-target policy.
+  themselves), with an age-based anti-starvation tiebreak: any request —
+  SLA'd or not — that has waited ``max_wait`` ticks is promoted ahead of
+  the deadline order (oldest promoted first), so a sustained stream of
+  tight-deadline traffic cannot starve batch requests indefinitely.
+  ``sla_edf:N`` selects a non-default promotion bound.
 
-All three admit at most ``len(free_slots)`` requests and assign the
+A scheduler name may carry a ``:arg`` suffix (``sla_edf:32``); the bare
+name resolves to the registered default instance.
+
+All schedulers admit at most ``len(free_slots)`` requests and assign the
 lowest-numbered free slots first, so scheduling decisions are
 deterministic given the queue — what the bit-equivalence tests rely on.
+The engine walks :meth:`~_SchedulerBase.order` itself so that live
+admission gates (tenant quotas, paged-cache block budgets) can pass a
+blocked request over without wasting the slot; :meth:`~_SchedulerBase
+.select` remains the one-shot functional form of the same decision.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 SCHEDULERS: Dict[str, Any] = {}
 
@@ -37,29 +48,52 @@ def register_scheduler(name: str):
 
 
 def get_scheduler(name: str):
+    """Resolve ``name`` (optionally ``name:arg``) to a scheduler instance."""
+    base, _, arg = name.partition(":")
     try:
-        return SCHEDULERS[name]
+        sched = SCHEDULERS[base]
     except KeyError:
         raise ValueError(
-            f"unknown scheduler {name!r}; registered: {sorted(SCHEDULERS)}"
+            f"unknown scheduler {base!r}; registered: {sorted(SCHEDULERS)}"
         ) from None
+    return sched.configure(arg) if arg else sched
 
 
 class _SchedulerBase:
-    """Order the queue, then zip with the free slots."""
+    """Order the queue; the engine (or ``select``) fills the free slots."""
 
     def order(self, queue: Sequence, now: int) -> List:
         raise NotImplementedError
 
+    def configure(self, arg: str):
+        """Build a re-parameterized instance from a ``name:arg`` spec."""
+        raise ValueError(
+            f"scheduler {type(self).__name__} takes no ':{arg}' parameter"
+        )
+
     def select(
-        self, queue: Sequence, free_slots: Sequence[int], now: int
+        self,
+        queue: Sequence,
+        free_slots: Sequence[int],
+        now: int,
+        eligible: Optional[Callable[[Any], bool]] = None,
     ) -> List[Tuple[Any, int]]:
-        """-> [(request, slot)] admissions for this tick (subset of queue)."""
+        """-> [(request, slot)] admissions for this tick (subset of queue).
+
+        ``eligible`` is the live admission gate (tenant quota / cache
+        budget): an ineligible request is passed over and the next request
+        in scheduling order takes the slot instead.
+        """
         if not queue or not free_slots:
             return []
-        ordered = self.order(list(queue), now)
         slots = sorted(free_slots)
-        return list(zip(ordered[: len(slots)], slots))
+        picked = []
+        for r in self.order(list(queue), now):
+            if len(picked) == len(slots):
+                break
+            if eligible is None or eligible(r):
+                picked.append(r)
+        return list(zip(picked, slots))
 
 
 @register_scheduler("fcfs")
@@ -82,8 +116,24 @@ class PriorityScheduler(_SchedulerBase):
 class SlaEdfScheduler(_SchedulerBase):
     name = "sla_edf"
 
-    def order(self, queue, now):
-        def deadline(r):
-            return r.arrival + r.sla if r.sla is not None else float("inf")
+    def __init__(self, max_wait: int = 64):
+        if max_wait < 1:
+            raise ValueError(f"max_wait must be >= 1, got {max_wait}")
+        self.max_wait = max_wait
 
-        return sorted(queue, key=lambda r: (deadline(r), r.arrival, r.id))
+    def configure(self, arg: str):
+        return SlaEdfScheduler(max_wait=int(arg))
+
+    def order(self, queue, now):
+        def key(r):
+            if now - r.arrival >= self.max_wait:
+                # anti-starvation promotion: a request that has waited the
+                # bound goes ahead of every unpromoted deadline, oldest
+                # first — EDF pressure can no longer starve it
+                return (0, r.arrival, 0, r.id)
+            deadline = (
+                r.arrival + r.sla if r.sla is not None else float("inf")
+            )
+            return (1, deadline, r.arrival, r.id)
+
+        return sorted(queue, key=key)

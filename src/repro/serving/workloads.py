@@ -115,6 +115,28 @@ class LLMDecodeWorkload:
         plen = int(np.asarray(req.prompt).shape[0])
         return max(1, min(int(req.max_new), self.pool.max_len - plen - 1))
 
+    def sample_request(self, tenant, rng, *, id: int, arrival: int):
+        """One seeded request for ``tenant`` (serving/tenants.py): prompt
+        length in [1, tenant.prompt_len] clamped to the pool's shape,
+        budget in [max_new/2, max_new] clamped to cache capacity."""
+        from repro.serving.engine import Request
+
+        plen = int(rng.integers(
+            1, max(1, min(tenant.prompt_len, self.pool.max_prompt_len)) + 1
+        ))
+        hi = max(1, min(tenant.max_new, self.pool.max_len - plen - 1))
+        lo = max(1, hi // 2)
+        return Request(
+            id=id,
+            arrival=arrival,
+            prompt=rng.integers(0, self.cfg.vocab, size=plen).astype(np.int32),
+            max_new=int(rng.integers(lo, hi + 1)),
+            eos=-1,
+            priority=tenant.priority,
+            sla=tenant.sla,
+            tenant=tenant.name,
+        )
+
     def admit(self, req, slot: int, now: int) -> None:
         tok0 = self.pool.admit(self.params, req.prompt, slot)
         self._out[slot] = [tok0]
@@ -211,6 +233,26 @@ class FixedPointWorkload:
 
     def clamp_max_new(self, req) -> int:
         return int(req.max_new)
+
+    def sample_request(self, tenant, rng, *, id: int, arrival: int):
+        """One seeded request for ``tenant``: a normalized random
+        personalization vector / right-hand side of the pool's size
+        (payload scale matched to ``payload0`` so thresholds transfer)."""
+        from repro.serving.engine import Request
+
+        n = self.payload0.shape[0]
+        v = rng.random(n).astype(np.float32)
+        scale = float(np.abs(self.payload0).sum()) or 1.0
+        return Request(
+            id=id,
+            arrival=arrival,
+            payload=v * (scale / max(float(v.sum()), 1e-9)),
+            max_new=tenant.max_new,
+            priority=tenant.priority,
+            sla=tenant.sla,
+            eps=tenant.eps,
+            tenant=tenant.name,
+        )
 
     def migrate_dp(self, new_dp: int) -> None:
         """Elastic resize: per-slot iterates survive untouched; only the

@@ -1,0 +1,153 @@
+"""Direct unit tests for the admission schedulers (``SCHEDULERS``).
+
+Schedulers were previously exercised only through engine integration
+runs; these tests pin their contracts in isolation: ordering and
+tie-breaking per policy, the free-slot zip (lowest slots first, at most
+``len(free_slots)`` admissions), the ``eligible`` pass-over gate, the
+``name:arg`` spec parsing, and ``sla_edf``'s age-based anti-starvation
+promotion (the bugfix: a sustained stream of tight-deadline traffic must
+not starve no-SLA batch requests indefinitely).
+"""
+
+import pytest
+
+from repro.serving import SCHEDULERS, get_scheduler
+from repro.serving.schedulers import SlaEdfScheduler
+
+
+class R:
+    def __init__(self, id, arrival, priority=0, sla=None):
+        self.id, self.arrival = id, arrival
+        self.priority, self.sla = priority, sla
+
+    def __repr__(self):
+        return f"R{self.id}"
+
+
+def ids(pairs):
+    return [r.id for r, _ in pairs]
+
+
+def slots(pairs):
+    return [s for _, s in pairs]
+
+
+# ---------------------------------------------------------------------------
+# ordering + tie-breaking
+# ---------------------------------------------------------------------------
+
+
+def test_fcfs_orders_by_arrival_then_id():
+    q = [R(3, 5), R(1, 2), R(2, 2), R(0, 9)]
+    out = get_scheduler("fcfs").order(q, now=10)
+    assert [r.id for r in out] == [1, 2, 3, 0]  # arrival, ties by id
+
+
+def test_priority_orders_by_priority_then_fcfs():
+    q = [R(0, 1), R(1, 5, priority=2), R(2, 3, priority=2), R(3, 0, priority=1)]
+    out = get_scheduler("priority").order(q, now=6)
+    # priority desc; among equal priority, arrival asc
+    assert [r.id for r in out] == [2, 1, 3, 0]
+
+
+def test_sla_edf_deadline_order_and_no_sla_last():
+    q = [R(0, 0), R(1, 4, sla=10), R(2, 0, sla=8), R(3, 1)]
+    out = get_scheduler("sla_edf").order(q, now=5)
+    # deadlines: r2 at 8, r1 at 14; no-SLA r0/r3 sort last, FCFS among
+    # themselves
+    assert [r.id for r in out] == [2, 1, 0, 3]
+
+
+def test_sla_edf_deadline_tie_breaks_by_arrival_then_id():
+    q = [R(5, 4, sla=6), R(4, 2, sla=8), R(6, 2, sla=8)]
+    out = get_scheduler("sla_edf").order(q, now=5)
+    assert [r.id for r in out] == [4, 6, 5]  # all deadline 10: arrival, id
+
+
+# ---------------------------------------------------------------------------
+# select(): free-slot zip + eligibility pass-over
+# ---------------------------------------------------------------------------
+
+
+def test_select_assigns_lowest_slots_in_order_deterministically():
+    q = [R(0, 3), R(1, 1), R(2, 2)]
+    sched = get_scheduler("fcfs")
+    out = sched.select(q, [7, 2, 5], now=4)
+    assert ids(out) == [1, 2, 0]
+    assert slots(out) == [2, 5, 7]  # lowest-numbered slots first
+    # pure function of (queue, slots, now): replays identically
+    assert ids(sched.select(list(q), [7, 2, 5], now=4)) == [1, 2, 0]
+
+
+def test_select_admits_at_most_free_slots():
+    q = [R(i, i) for i in range(5)]
+    out = get_scheduler("fcfs").select(q, [0, 1], now=9)
+    assert ids(out) == [0, 1]
+
+
+def test_select_empty_queue_or_no_slots():
+    assert get_scheduler("fcfs").select([], [0], now=0) == []
+    assert get_scheduler("fcfs").select([R(0, 0)], [], now=0) == []
+
+
+def test_select_eligible_gate_passes_over_blocked_requests():
+    q = [R(0, 0), R(1, 1), R(2, 2)]
+    out = get_scheduler("fcfs").select(
+        q, [0, 1], now=5, eligible=lambda r: r.id != 0
+    )
+    # r0 is blocked (quota / cache budget): the slot goes to the next
+    # request in scheduling order instead of being wasted
+    assert ids(out) == [1, 2]
+    assert slots(out) == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# name:arg specs
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_scheduler_raises():
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        get_scheduler("deadline")
+
+
+def test_spec_arg_builds_parameterized_instance():
+    s = get_scheduler("sla_edf:7")
+    assert isinstance(s, SlaEdfScheduler) and s.max_wait == 7
+    # the registry default is untouched
+    assert SCHEDULERS["sla_edf"].max_wait == 64
+
+
+def test_spec_arg_rejected_by_parameterless_schedulers():
+    with pytest.raises(ValueError, match="takes no"):
+        get_scheduler("fcfs:3")
+
+
+def test_sla_edf_rejects_nonpositive_max_wait():
+    with pytest.raises(ValueError, match="max_wait"):
+        get_scheduler("sla_edf:0")
+
+
+# ---------------------------------------------------------------------------
+# anti-starvation promotion (bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_sla_edf_promotes_starved_request_to_front():
+    batch = R(0, 0)  # no SLA: EDF alone would sort it last forever
+    q = [batch] + [R(i, 10 + i, sla=2) for i in range(1, 4)]
+    s = get_scheduler("sla_edf:8")
+    assert [r.id for r in s.order(q, now=7)][-1] == 0  # not yet promoted
+    out = s.order(q, now=8)  # waited max_wait -> promoted
+    assert out[0].id == 0
+    # promoted requests rank oldest-first, ahead of every live deadline
+    q2 = q + [R(9, 1)]
+    out2 = s.order(q2, now=20)
+    assert [r.id for r in out2[:2]] == [0, 9]
+
+
+def test_sla_edf_promotion_applies_to_slad_requests_too():
+    old = R(0, 0, sla=100)  # far deadline but ancient
+    q = [old] + [R(i, 63 + i, sla=1) for i in range(1, 4)]
+    out = get_scheduler("sla_edf").order(q, now=64)  # default max_wait=64
+    assert out[0].id == 0

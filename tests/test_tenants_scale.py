@@ -1,0 +1,446 @@
+"""Multi-tenant traffic model + SLA autoscaling (DESIGN.md S17).
+
+Covers the scale layer end to end on the cheap fixed-point workload:
+arrival generators (seeded, tick-domain), tenant-spec parsing, request
+materialization through workload ``sample_request`` hooks, quota-aware
+admission (a tenant at its in-flight quota is passed over, never
+wedged), the ``sla_edf`` anti-starvation bound under a starvation-shaped
+trace, the summary bugfixes (NaN percentiles on empty runs, NaN TPOT for
+single-token completions, excluded from percentiles), the
+``sla_autoscale`` policy state machine (hysteresis, cooldown, min/max
+clamps, per-controller ``spawn``), the ``slots_per_replica`` capacity
+model, and the merged :class:`TenantScenario` summary.
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.runtime.fault_tolerance import FailureDetector, HeartbeatConfig
+from repro.runtime.policies import LoadSnapshot, SlaAutoscalePolicy, get_policy
+from repro.serving import (
+    ARRIVALS,
+    Request,
+    ServeConfig,
+    ServeEngine,
+    TenantScenario,
+    TenantSpec,
+    build_requests,
+    make_arrival_ticks,
+    make_workload,
+    parse_tenant_specs,
+    quotas_of,
+)
+
+FP = "fixedpoint_solve"
+
+
+def fp_workload(slots=4, dp=1, n=16, **kw):
+    return make_workload(FP, solver="d_iteration", n=n, dp=dp, slots=slots,
+                         damping=0.6, **kw)
+
+
+# ---------------------------------------------------------------------------
+# arrival generators
+# ---------------------------------------------------------------------------
+
+
+def test_arrival_registry_floor():
+    assert {"none", "poisson", "bursty", "diurnal", "trace"} <= set(ARRIVALS)
+
+
+def test_arrivals_are_seeded_sorted_and_sized():
+    for spec in ("none", "poisson:0.5", "bursty:0.2,2.0", "bursty:0.2,2.0,0.1,10",
+                 "diurnal:1.0,40", "diurnal:1.0,40,0.2"):
+        a = make_arrival_ticks(spec, 30, seed=3)
+        b = make_arrival_ticks(spec, 30, seed=3)
+        assert a == b and len(a) == 30 and a == sorted(a)
+        assert all(isinstance(t, int) and t >= 0 for t in a)
+    assert make_arrival_ticks("poisson:0.5", 30, 3) != make_arrival_ticks(
+        "poisson:0.5", 30, 4
+    )
+
+
+def test_bursty_concentrates_arrivals_vs_base_rate():
+    ticks = make_arrival_ticks("bursty:0.05,5.0,0.05,20", 60, seed=1)
+    # a burst window dumps many arrivals on few distinct ticks; a pure
+    # 0.05/tick base process would spread 60 arrivals over ~1200 ticks
+    assert len(set(ticks)) < len(ticks) / 2
+
+
+def test_diurnal_peaks_mid_period():
+    ticks = make_arrival_ticks("diurnal:2.0,100,0.01", 100, seed=0)
+    phase = [t % 100 for t in ticks]
+    # valley start: the first quarter-period carries far fewer arrivals
+    # than the mid-period crest
+    assert sum(1 for p in phase if p < 25) < sum(1 for p in phase if 25 <= p < 75)
+
+
+def test_trace_arrivals_replay_file(tmp_path):
+    f = tmp_path / "trace.json"
+    f.write_text(json.dumps({"arrivals": [5, 1, 9, 9]}))
+    assert make_arrival_ticks(f"trace:{f}", 4, 0) == [1, 5, 9, 9]
+    with pytest.raises(ValueError, match="need 9"):
+        make_arrival_ticks(f"trace:{f}", 9, 0)
+
+
+def test_unknown_arrival_kind_raises():
+    with pytest.raises(ValueError, match="unknown arrival"):
+        make_arrival_ticks("pareto:1.0", 4, 0)
+
+
+def test_too_low_rate_raises_not_hangs():
+    with pytest.raises(ValueError, match="rate too low"):
+        make_arrival_ticks("diurnal:0.0,10,0.0", 5, 0)
+
+
+# ---------------------------------------------------------------------------
+# tenant specs + request materialization
+# ---------------------------------------------------------------------------
+
+
+def test_parse_tenant_specs():
+    chat, batch = parse_tenant_specs(
+        "chat:3:sla=8:prio=2:gen=12,batch:quota=4:workload=fixedpoint_solve"
+    )
+    assert chat == TenantSpec("chat", weight=3.0, sla=8, priority=2, max_new=12)
+    assert batch.weight == 1.0 and batch.quota == 4 and batch.workload == FP
+    assert batch.sla is None
+    assert quotas_of((chat, batch)) == {"batch": 4}
+
+
+@pytest.mark.parametrize("bad", ["chat:1:deadline=3", "a:1,a:2", ""])
+def test_parse_tenant_specs_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_tenant_specs(bad)
+
+
+def test_build_requests_routes_by_workload_with_unique_ids():
+    wl = fp_workload()
+    tenants = parse_tenant_specs(
+        f"solve:2:sla=50:workload={FP}:gen=500,bulk:1:workload={FP}:gen=500"
+    )
+    out = build_requests(tenants, {FP: wl}, 20, "poisson:1.0", seed=5)
+    reqs = out[FP]
+    assert len(reqs) == 20
+    assert sorted(r.id for r in reqs) == list(range(20))
+    assert {r.tenant for r in reqs} == {"solve", "bulk"}
+    for r in reqs:
+        assert r.payload is not None and r.payload.shape == (16,)
+        assert (r.sla == 50) == (r.tenant == "solve")
+    # deterministic: same (tenants, spec, seed) -> same stream
+    again = build_requests(tenants, {FP: wl}, 20, "poisson:1.0", seed=5)[FP]
+    assert [(r.tenant, r.arrival) for r in reqs] == [
+        (r.tenant, r.arrival) for r in again
+    ]
+
+
+def test_build_requests_rejects_undeployed_workload():
+    tenants = (TenantSpec("chat"),)  # targets llm_decode
+    with pytest.raises(ValueError, match="llm_decode"):
+        build_requests(tenants, {FP: fp_workload()}, 4, "none", 0)
+
+
+def test_weights_must_be_positive():
+    tenants = (TenantSpec("a", weight=0.0, workload=FP),)
+    with pytest.raises(ValueError, match="positive"):
+        build_requests(tenants, {FP: fp_workload()}, 4, "none", 0)
+
+
+# ---------------------------------------------------------------------------
+# quota-aware admission
+# ---------------------------------------------------------------------------
+
+
+def test_quota_limits_inflight_and_passes_slot_over():
+    wl = fp_workload(slots=4)
+    eng = ServeEngine(wl, ServeConfig(
+        termination="residual_interval", eps=1e-2,
+        quotas={"bulk": 1},
+    ))
+    reqs = [Request(id=i, arrival=0, max_new=500,
+                    tenant="bulk" if i < 3 else "free")
+            for i in range(6)]
+    eng.run(reqs)
+    assert len(eng.results) == 6
+    bulk = sorted((r for r in eng.results.values() if r.tenant == "bulk"),
+                  key=lambda r: r.admit_tick)
+    # quota=1: bulk's in-flight intervals never overlap
+    for a, b in zip(bulk, bulk[1:]):
+        assert b.admit_tick >= a.retire_tick
+    # the passed-over slots served the unquota'd tenant immediately
+    free = [r for r in eng.results.values() if r.tenant == "free"]
+    assert all(r.admit_tick == 0 for r in free)
+
+
+# ---------------------------------------------------------------------------
+# starvation bound under a starvation-shaped trace (bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_no_request_waits_past_promotion_bound():
+    wl = fp_workload(slots=2)
+    eng = ServeEngine(wl, ServeConfig(
+        scheduler="sla_edf:8", termination="residual_interval", eps=1e-2,
+    ))
+    # a sustained stream of tight-deadline requests + one batch request at
+    # t=0: pure EDF would starve the batch request for the whole run
+    reqs = [Request(id=0, arrival=0, max_new=500, tenant="batch")]
+    # two tight-deadline arrivals per tick saturate both slots from t=0
+    reqs += [Request(id=1 + i, arrival=i // 2, max_new=500, sla=4,
+                     tenant="chat")
+             for i in range(40)]
+    eng.run(reqs)
+    batch = eng.results[0]
+    assert batch.admit_tick > 0  # it did contend with the stream
+    # promoted after max_wait=8 ticks; it still has to wait for a slot to
+    # free (one in-flight solve), hence the slack
+    solve_ticks = max(r.retire_tick - r.admit_tick for r in eng.results.values())
+    assert batch.admit_tick - batch.arrival <= 8 + solve_ticks
+    # and it genuinely bypassed the deadline stream: chat requests that
+    # arrived before the batch admission were still waiting behind it
+    bypassed = [r for r in eng.results.values()
+                if r.tenant == "chat" and r.arrival < batch.admit_tick
+                and r.admit_tick > batch.admit_tick]
+    assert bypassed
+
+
+# ---------------------------------------------------------------------------
+# summary bugfixes: NaN, never fake zeros
+# ---------------------------------------------------------------------------
+
+
+def test_empty_summary_reports_nan_percentiles():
+    eng = ServeEngine(fp_workload(), ServeConfig(
+        termination="residual_interval",
+    ))
+    s = eng.summary()
+    for k in ("ttft_p50_ms", "ttft_p95_ms", "ttft_p99_ms",
+              "tpot_p50_ms", "tpot_p95_ms", "tpot_p99_ms"):
+        assert math.isnan(s[k]), f"{k} should be NaN on an empty run, got {s[k]}"
+    assert s["completed"] == 0 and s["tenants"] == {}
+
+
+def test_single_token_completion_tpot_nan_and_excluded():
+    wl = fp_workload(slots=2)
+    eng = ServeEngine(wl, ServeConfig(termination="residual_interval",
+                                      eps=1e-2))
+    # max_new=1: budget-forced after a single iteration -> n_tokens == 1,
+    # which has no inter-token interval
+    eng.run([Request(id=0, max_new=1), Request(id=1, max_new=500)])
+    assert eng.results[0].n_tokens == 1
+    assert math.isnan(eng.results[0].tpot_s)
+    s = eng.summary()
+    # the percentile ranks only the multi-token request - finite, not
+    # dragged toward 0.0 by the single-token completion
+    assert math.isfinite(s["tpot_p50_ms"]) and s["tpot_p50_ms"] > 0.0
+
+
+def test_sla_met_is_tick_domain():
+    wl = fp_workload(slots=1)
+    eng = ServeEngine(wl, ServeConfig(termination="residual_interval",
+                                      eps=1e-2))
+    eng.run([Request(id=0, max_new=500, sla=0),
+             Request(id=1, max_new=500, sla=0)])
+    # slot 1 is busy until the first solve retires: request 1 must miss a
+    # zero-tick TTFT deadline, request 0 meets it
+    assert eng.results[0].sla_met is True
+    assert eng.results[1].sla_met is False
+    s = eng.summary()
+    assert s["sla_total"] == 2 and s["sla_met"] == 1 and s["goodput_ok"] == 1
+
+
+def test_per_tenant_summary_breakdown():
+    wl = fp_workload(slots=4)
+    eng = ServeEngine(wl, ServeConfig(termination="residual_interval",
+                                      eps=1e-2))
+    eng.run([Request(id=0, max_new=500, sla=50, tenant="chat"),
+             Request(id=1, max_new=500, tenant="batch")])
+    t = eng.summary()["tenants"]
+    assert set(t) == {"chat", "batch"}
+    assert t["chat"]["sla_total"] == 1 and t["chat"]["sla_met"] == 1
+    assert t["batch"]["sla_total"] == 0 and t["batch"]["goodput_ok"] == 1
+    assert math.isfinite(t["chat"]["ttft_p99_ticks"])
+    assert math.isfinite(t["chat"]["ttft_p99_ms"])
+
+
+# ---------------------------------------------------------------------------
+# sla_autoscale policy state machine
+# ---------------------------------------------------------------------------
+
+
+def mk_detector(ids=(0,)):
+    return FailureDetector(list(ids), HeartbeatConfig(), now=0.0)
+
+
+def load(tick, *, queue=0, near=0, overdue=0, free=0, usable=8, dp=1):
+    return LoadSnapshot(tick=tick, queue_depth=queue, sla_near=near,
+                        sla_overdue=overdue, free_slots=free,
+                        usable_slots=usable, dp=dp)
+
+
+def test_autoscale_grows_after_up_patience_with_synthesized_joiner():
+    p = SlaAutoscalePolicy(max_extent=4, up_patience=2, cooldown=3)
+    det = mk_detector((0, 1))
+    ids = frozenset({0, 1})
+    # first pressured step arms the counter, second fires the grow
+    assert p.decide(det, 1.0, [], ids, load=load(1, queue=9)).action == "none"
+    d = p.decide(det, 2.0, [], ids, load=load(2, queue=9))
+    assert d.action == "grow" and d.admit == (2,)  # max(live)+1
+
+
+def test_autoscale_cooldown_suppresses_thrash():
+    p = SlaAutoscalePolicy(max_extent=4, up_patience=1, cooldown=5)
+    det = mk_detector((0,))
+    d = p.decide(det, 1.0, [], frozenset({0}), load=load(10, queue=9))
+    assert d.action == "grow"
+    # inside the cooldown window nothing fires, however hard the pressure
+    d2 = p.decide(det, 2.0, [], frozenset({0, 1}), load=load(12, queue=99))
+    assert d2.action == "none" and "cooldown" in d2.reason
+    d3 = p.decide(det, 3.0, [], frozenset({0, 1}), load=load(15, queue=99))
+    assert d3.action == "grow"
+
+
+def test_autoscale_shrinks_idle_to_min_extent_only():
+    p = SlaAutoscalePolicy(min_extent=2, max_extent=4, down_patience=2,
+                           cooldown=0)
+    det = mk_detector((0, 1, 2))
+    ids = frozenset({0, 1, 2})
+    idle = dict(free=8, usable=8)
+    assert p.decide(det, 1.0, [], ids, load=load(1, **idle)).action == "none"
+    d = p.decide(det, 2.0, [], ids, load=load(2, **idle))
+    assert d.action == "shrink" and d.remove == frozenset({2})  # max(live)
+    # at min_extent the shrink never fires
+    p2 = SlaAutoscalePolicy(min_extent=2, max_extent=4, down_patience=1,
+                            cooldown=0)
+    for t in range(1, 5):
+        d = p2.decide(det, float(t), [], frozenset({0, 1}),
+                      load=load(t, **idle))
+        assert d.action == "none"
+
+
+def test_autoscale_respects_max_extent():
+    p = SlaAutoscalePolicy(max_extent=2, up_patience=1, cooldown=0)
+    det = mk_detector((0, 1))
+    for t in range(1, 5):
+        d = p.decide(det, float(t), [], frozenset({0, 1}),
+                     load=load(t, queue=50))
+        assert d.action == "none"
+
+
+def test_autoscale_mixed_load_resets_both_counters():
+    p = SlaAutoscalePolicy(up_patience=2, down_patience=2, cooldown=0)
+    det = mk_detector((0, 1))
+    ids = frozenset({0, 1})
+    p.decide(det, 1.0, [], ids, load=load(1, queue=9))  # arms up
+    # neither pressured nor idle: busy steady state resets the counters
+    p.decide(det, 2.0, [], ids, load=load(2, queue=0, free=0))
+    d = p.decide(det, 3.0, [], ids, load=load(3, queue=9))
+    assert d.action == "none"  # up-counter restarted
+
+
+def test_autoscale_spawn_isolates_state_and_registry_passthrough():
+    reg = get_policy("sla_autoscale")
+    a, b = reg.spawn(), reg.spawn()
+    assert a is not reg and a is not b
+    det = mk_detector((0,))
+    a._up = 99
+    assert b._up == 0
+    # stateless policies spawn themselves
+    static = get_policy("static")
+    assert static.spawn() is static
+    # without a load snapshot the policy degrades to shrink_on_failure
+    assert a.decide(det, 1.0, [], frozenset({0})).action == "none"
+
+
+def test_autoscale_invalid_extents_raise():
+    with pytest.raises(ValueError):
+        SlaAutoscalePolicy(min_extent=0)
+    with pytest.raises(ValueError):
+        SlaAutoscalePolicy(min_extent=4, max_extent=2)
+
+
+# ---------------------------------------------------------------------------
+# capacity model + end-to-end autoscaling
+# ---------------------------------------------------------------------------
+
+
+def test_slots_per_replica_masks_admission_capacity():
+    wl = fp_workload(slots=4)
+    eng = ServeEngine(wl, ServeConfig(
+        termination="residual_interval", eps=1e-2, dp=1,
+        slots_per_replica=2,
+    ))
+    assert eng.usable_slots == 2
+    eng.run([Request(id=i, max_new=500) for i in range(4)])
+    # only 2 slots ever admit at dp=1: the other two requests queue
+    assert len(eng.results) == 4
+    assert sum(1 for r in eng.results.values() if r.admit_tick == 0) == 2
+    assert max(r.admit_tick for r in eng.results.values()) > 0
+
+
+def test_autoscale_end_to_end_grows_under_burst_and_completes():
+    from repro.runtime import ElasticServeController
+
+    wl = fp_workload(slots=6, n=24)
+    eng = ServeEngine(wl, ServeConfig(
+        scheduler="sla_edf", termination="residual_interval", eps=1e-2,
+        dp=1, slots_per_replica=2, steps_per_dispatch=2,
+    ))
+    ctl = ElasticServeController(
+        eng,
+        policy=SlaAutoscalePolicy(max_extent=3, up_patience=1, cooldown=2),
+    )
+    reqs = [Request(id=i, arrival=0, max_new=500, sla=10)
+            for i in range(12)]
+    res = ctl.run(reqs)
+    assert len(res) == 12
+    grows = [ev for ev in eng.resizes if ev.kind == "grow"]
+    assert grows, "burst pressure should have grown the extent"
+    assert max(ev.new_dp for ev in eng.resizes) <= 3
+    assert eng.usable_slots == min(6, eng.dp * 2)
+    s = eng.summary()
+    assert s["replica_ticks"] > 0
+    # a static dp=1 run of the same traffic meets strictly fewer deadlines
+    wl2 = fp_workload(slots=6, n=24)
+    eng2 = ServeEngine(wl2, ServeConfig(
+        scheduler="sla_edf", termination="residual_interval", eps=1e-2,
+        dp=1, slots_per_replica=2, steps_per_dispatch=2,
+    ))
+    eng2.run([Request(id=i, arrival=0, max_new=500, sla=10)
+              for i in range(12)])
+    assert s["sla_met"] > eng2.summary()["sla_met"]
+
+
+# ---------------------------------------------------------------------------
+# TenantScenario merged summary
+# ---------------------------------------------------------------------------
+
+
+def test_tenant_scenario_merges_engines_and_tenants():
+    wl_a, wl_b = fp_workload(slots=2), fp_workload(slots=2, n=24)
+    tenants = (
+        TenantSpec("alpha", weight=2.0, workload="fp_a", sla=40, max_new=500),
+        TenantSpec("beta", weight=1.0, workload="fp_b", max_new=500),
+    )
+    reqs = build_requests(tenants, {"fp_a": wl_a, "fp_b": wl_b}, 10,
+                          "poisson:0.5", seed=2)
+    scen = TenantScenario({
+        "fp_a": ServeEngine(wl_a, ServeConfig(termination="residual_interval",
+                                              eps=1e-2)),
+        "fp_b": ServeEngine(wl_b, ServeConfig(termination="residual_interval",
+                                              eps=1e-2)),
+    })
+    out = scen.run(reqs)
+    assert len(out["fp_a"]) + len(out["fp_b"]) == 10
+    s = scen.summary()
+    assert s["completed"] == 10
+    assert set(s["tenants"]) == {"alpha", "beta"}
+    assert s["ticks"] == sum(e["ticks"] for e in s["engines"].values())
+    assert s["replica_ticks"] == sum(
+        e["replica_ticks"] for e in s["engines"].values()
+    )
+    assert math.isfinite(s["ttft_p99_ms"])
+    assert s["goodput_ok"] == s["completed"] - s["sla_total"] + s["sla_met"]
