@@ -34,6 +34,7 @@ from repro.asynchrony import (
     make_solver,
     sweep,
 )
+from repro.asynchrony.engine import record_detection_delay
 from repro.configs.paper_poisson1d import CONFIG as PAPER
 
 PROTOCOLS = ("sync", "inexact", "exact", "interval")  # vs 'oracle' baseline
@@ -84,6 +85,9 @@ def run_sweeps(n: int, p: int, seeds, models, eps: float):
                 })
                 continue
             delay = float((r.ticks.astype(np.float64) - base_ticks).mean())
+            # gauge async.detect.delay_vs_oracle[protocol=...] when the obs
+            # subsystem is live (benchmarks/run.py --telemetry); no-op here
+            record_detection_delay(det, r.ticks, oracle.ticks)
             rows.append({
                 "name": f"async_{model}_{det}_ticks_p{p}",
                 "model": model, "protocol": det, "p": p,

@@ -606,5 +606,24 @@ if __name__ == "__main__":
     ap.add_argument("--check", action="store_true",
                     help="assert continuous >= static throughput at peak "
                          "arrival + fixedpoint certification (CI gate)")
+    ap.add_argument("--telemetry", default=None, metavar="SINK[:PATH]",
+                    help="run the whole sweep with the obs subsystem live "
+                         "(null | jsonl[:f] | csv[:f] | chrome_trace[:f]); "
+                         "benchmarks/bench_telemetry.py gates the overhead "
+                         "of this against the disabled baseline")
     args = ap.parse_args()
-    main(json_path=args.json, quick=args.quick, check=args.check)
+    if args.telemetry:
+        from repro import obs
+
+        try:
+            obs.configure(args.telemetry)
+        except ValueError as e:
+            raise SystemExit(f"--telemetry: {e}")
+    try:
+        main(json_path=args.json, quick=args.quick, check=args.check)
+    finally:
+        if args.telemetry:
+            t = obs.shutdown()
+            print(f"# telemetry[{t['sink']}]: {t['spans']} spans, "
+                  f"{t['instants']} instants, "
+                  f"{t['events_dropped'] + t['metrics_dropped']} dropped")

@@ -2,9 +2,18 @@
 loop-calibrated cost fits (flops / bytes / collective bytes) and prints the
 three-term roofline per (arch x shape) — EXPERIMENTS.md §Roofline reads this.
 
+Also prints the *collective message model*: per-(schedule, p) message and
+step counts regenerated from the live ``CollectivePlan`` stage tables (the
+single accounting the bucketed/paged engines execute) and emitted through
+the obs metrics registry, checked against the paper's closed forms.  The
+table predated the bucketed paths and had drifted from a hand-maintained
+copy of the counts; it now cannot drift — it reads the same
+``bound_stage_table()`` the executors run.
+
 Usage:
   PYTHONPATH=src python -m benchmarks.roofline_table \\
-      [--dryrun results/dryrun] [--cal results/calibrate] [--mesh single] [--json out.json]
+      [--dryrun results/dryrun] [--cal results/calibrate] [--mesh single] \\
+      [--json out.json] [--extents 2,3,5,8,17]
 """
 
 from __future__ import annotations
@@ -15,7 +24,71 @@ import json
 import os
 
 from repro.configs import registry, shapes
+from repro.core import topology
 from repro.launch import roofline as R
+from repro.obs import MetricsRegistry
+
+
+def message_model(ps, schedules=("mrd", "rabenseifner")):
+    """Regenerate per-(schedule, p) collective message accounting from the
+    live plan layer, routed through a :class:`MetricsRegistry` (the same
+    instruments ``--telemetry`` uses) and read back from its snapshot —
+    so the printed numbers are exactly what the obs plane would report.
+
+    Returns (rows, drift): drift lists any (schedule, p) where the plan's
+    stage table disagrees with the paper's closed form (mrd only — the
+    other schedules have no paper closed form to pin)."""
+    from repro.collectives.plans import CollectivePlan
+
+    reg = MetricsRegistry()
+    meta = {}
+    for sched in schedules:
+        for p in ps:
+            plan = CollectivePlan(schedule=sched, executor="sim", p=p)
+            msgs = steps = 0
+            shift = 0  # the paper's 2*(p - 2^floor(log2 p)) extra messages
+            for st, _coll, _ai, sp in plan.bound_stage_table():
+                msgs += len(st.pairs)
+                steps += 1
+                if st.kind in ("bshift", "fshift"):
+                    shift += len(st.pairs)
+            reg.counter("coll.model.messages", schedule=sched, p=str(p)).add(msgs)
+            reg.counter("coll.model.steps", schedule=sched, p=str(p)).add(steps)
+            reg.counter("coll.model.extra_msgs", schedule=sched, p=str(p)).add(shift)
+            meta[(sched, p)] = (msgs, steps, shift)
+    counters = reg.snapshot()["counters"]
+
+    rows, drift = [], []
+    for (sched, p), _ in meta.items():
+        key = f"[p={p},schedule={sched}]"
+        msgs = int(counters["coll.model.messages" + key])
+        steps = int(counters["coll.model.steps" + key])
+        shift = int(counters["coll.model.extra_msgs" + key])
+        row = {"schedule": sched, "p": p, "messages": msgs, "steps": steps,
+               "extra_msgs": shift}
+        if sched == "mrd":
+            want_m = topology.paper_message_count(p)
+            want_s = topology.paper_step_count(p)
+            want_x = 2 * topology.pivot(p)[2]
+            row["paper_messages"] = want_m
+            if (msgs, steps, shift) != (want_m, want_s, want_x):
+                drift.append(row)
+        rows.append(row)
+    return rows, drift
+
+
+def format_message_model(rows):
+    head = f"{'schedule':<14}{'p':>4}{'steps':>7}{'messages':>10}{'extra':>7}  paper"
+    lines = [head, "-" * len(head)]
+    for r in rows:
+        paper = r.get("paper_messages")
+        ok = "" if paper is None else ("  ok" if paper == r["messages"]
+                                       else f"  DRIFT(want {paper})")
+        lines.append(
+            f"{r['schedule']:<14}{r['p']:>4}{r['steps']:>7}"
+            f"{r['messages']:>10}{r['extra_msgs']:>7}{ok}"
+        )
+    return "\n".join(lines)
 
 
 def load(dryrun_dir, cal_dir, mesh):
@@ -66,20 +139,38 @@ def main():
     ap.add_argument("--cal", default="results/calibrate")
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--extents", default="2,3,5,8,17",
+                    help="comma-separated p values for the message model")
     args = ap.parse_args()
+
+    ps = [int(x) for x in args.extents.split(",") if x]
+    msg_rows, drift = message_model(ps)
+    print("collective message model (regenerated from CollectivePlan):")
+    print(format_message_model(msg_rows))
+    if drift:
+        raise SystemExit(
+            f"message-model drift vs paper closed form: {drift}"
+        )
+
     reports = load(args.dryrun, args.cal, args.mesh)
-    print(R.format_table(reports))
-    ncal = sum(1 for r in reports if getattr(r, "_calibrated", False))
-    print(f"\n({ncal}/{len(reports)} cells loop-calibrated; HBM fit uses "
-          f"temp_bytes_tpu_adjusted + args, v5e budget 16 GB/chip)")
-    over = [
-        r for r in reports
-        if r.peak_memory_bytes and r.peak_memory_bytes > 16e9
-    ]
-    for r in over:
-        print(f"  OVER-BUDGET: {r.arch}/{r.shape}: {r.peak_memory_bytes/1e9:.1f} GB")
+    if not reports:
+        print(f"\n(no dry-run results under {args.dryrun!r}/{args.cal!r} — "
+              f"roofline section skipped; run launch/dryrun.py + "
+              f"benchmarks/calibrate to populate)")
+    else:
+        print()
+        print(R.format_table(reports))
+        ncal = sum(1 for r in reports if getattr(r, "_calibrated", False))
+        print(f"\n({ncal}/{len(reports)} cells loop-calibrated; HBM fit uses "
+              f"temp_bytes_tpu_adjusted + args, v5e budget 16 GB/chip)")
+        over = [
+            r for r in reports
+            if r.peak_memory_bytes and r.peak_memory_bytes > 16e9
+        ]
+        for r in over:
+            print(f"  OVER-BUDGET: {r.arch}/{r.shape}: {r.peak_memory_bytes/1e9:.1f} GB")
     if args.json:
-        R.save_reports(reports, args.json)
+        R.save_reports(reports, args.json, extra={"message_model": msg_rows})
 
 
 if __name__ == "__main__":

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.asynchrony.delay_models import get_delay_model
 from repro.asynchrony.protocols import RES_INIT, Obs, get_protocol
 from repro.asynchrony.solvers import FixedPoint
@@ -195,11 +196,18 @@ def run(fp: FixedPoint, cfg: AsyncConfig, *, delay_params=None) -> AsyncResult:
     """One asynchronous solve under ``cfg`` (blocking; jitted while_loop)."""
     core, proto, _ = _build_core(fp, cfg)
     params = resolve_delay_params(fp, cfg, delay_params)
-    final = jax.jit(core)(jnp.int32(cfg.seed), params)
+    # Per-tick protocol events live inside the while_loop (traced) — the
+    # host-visible telemetry is the run span + the certify instant below.
+    with obs.span(
+        "async.run", protocol=cfg.detection, delay_model=cfg.delay_model, p=cfg.p
+    ):
+        final = jax.jit(core)(jnp.int32(cfg.seed), params)
+        if obs.enabled():
+            jax.block_until_ready(final["tick"])
 
     x_out = np.asarray(proto.finalize(final["det"], final["x"]))
     true_res = float(fp.residual_norm(jnp.asarray(x_out)))
-    return AsyncResult(
+    result = AsyncResult(
         detected=bool(final["det"]["detected"]),
         ticks=int(final["tick"]) - 1,
         res_glb=float(final["det"]["res_norm"]),
@@ -209,6 +217,23 @@ def run(fp: FixedPoint, cfg: AsyncConfig, *, delay_params=None) -> AsyncResult:
         messages_coll=int(final["messages_coll"]),
         x=x_out,
     )
+    if obs.enabled():
+        obs.instant(
+            "protocol.certify",
+            protocol=cfg.detection,
+            detected=result.detected,
+            tick=result.ticks,
+            res_glb=result.res_glb,
+            true_res=result.true_res,
+        )
+        obs.counter("async.messages_p2p", protocol=cfg.detection).add(
+            result.messages_p2p
+        )
+        obs.counter("async.messages_coll", protocol=cfg.detection).add(
+            result.messages_coll
+        )
+        obs.gauge("async.detect.ticks", protocol=cfg.detection).set(result.ticks)
+    return result
 
 
 def sweep(
@@ -231,16 +256,28 @@ def sweep(
     seeds = jnp.asarray(seeds, jnp.int32)
     core, proto, _ = _build_core(fp, cfg)
 
-    if delay_params is None:
-        params = resolve_delay_params(fp, cfg)
-        batched = jax.vmap(core, in_axes=(0, None))
-        final = jax.jit(batched)(seeds, params)
-        nbatch = 1
-    else:
-        over_seeds = jax.vmap(core, in_axes=(0, None))
-        over_grid = jax.vmap(lambda prm, s: over_seeds(s, prm), in_axes=(0, None))
-        final = jax.jit(over_grid)(delay_params, seeds)
-        nbatch = 2
+    with obs.span(
+        "async.sweep",
+        protocol=cfg.detection,
+        delay_model=cfg.delay_model,
+        p=cfg.p,
+        n_seeds=int(seeds.shape[0]),
+        gridded=delay_params is not None,
+    ):
+        if delay_params is None:
+            params = resolve_delay_params(fp, cfg)
+            batched = jax.vmap(core, in_axes=(0, None))
+            final = jax.jit(batched)(seeds, params)
+            nbatch = 1
+        else:
+            over_seeds = jax.vmap(core, in_axes=(0, None))
+            over_grid = jax.vmap(
+                lambda prm, s: over_seeds(s, prm), in_axes=(0, None)
+            )
+            final = jax.jit(over_grid)(delay_params, seeds)
+            nbatch = 2
+        if obs.enabled():
+            jax.block_until_ready(final["tick"])
 
     fin = proto.finalize
     res = jax.vmap(fp.residual_norm)
@@ -260,3 +297,12 @@ def sweep(
         messages_coll=np.asarray(final["messages_coll"]),
         x=np.asarray(xs),
     )
+
+
+def record_detection_delay(protocol: str, ticks, oracle_ticks) -> None:
+    """Detection-delay-vs-oracle telemetry, for callers that ran both a
+    detecting protocol and the ``oracle`` reference on the same scenario
+    (bench_async does; per-run this is unobservable without the oracle)."""
+    if obs.enabled():
+        delay = float(np.mean(np.asarray(ticks) - np.asarray(oracle_ticks)))
+        obs.gauge("async.detect.delay_vs_oracle", protocol=protocol).set(delay)

@@ -43,6 +43,8 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import numpy as np
 
+from repro import obs
+
 # Current on-disk state layout.  History:
 #   1: pre-PR-3 — flat optimizer {master, mu, nu}; ConvergenceMonitor
 #      policy state at the top level of the monitor dict (e.g.
@@ -229,7 +231,8 @@ class Checkpointer:
         ``True`` additionally joins the disk write.
         """
         self.wait()
-        staged = _stage_with_paths(state)
+        with obs.span("ckpt.save.stage", step=int(step)):
+            staged = _stage_with_paths(state)
         manifest = {
             "step": int(step),
             "time": time.time(),
@@ -240,26 +243,31 @@ class Checkpointer:
         transferred = threading.Event()
 
         def _write():
+            # runs on the writer thread — its spans land in their own
+            # trace lane, showing the d2h drain/npz write overlapping
+            # the train thread's next steps
             try:
-                # waits on the in-flight d2h copies, off the train thread
-                flat = {k: np.asarray(v) for k, v in staged.items()}
+                with obs.span("ckpt.d2h_wait", step=int(step)):
+                    # waits on the in-flight d2h copies, off the train thread
+                    flat = {k: np.asarray(v) for k, v in staged.items()}
                 transferred.set()
-                tmp = os.path.join(self.dir, f"step_{step}.tmp")
-                final = os.path.join(self.dir, f"step_{step}")
-                os.makedirs(tmp, exist_ok=True)
-                np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-                with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                    json.dump(manifest, f)
-                if os.path.exists(final):
-                    shutil.rmtree(final)
-                os.rename(tmp, final)
-                latest_tmp = os.path.join(self.dir, "LATEST.tmp")
-                with open(latest_tmp, "w") as f:
-                    f.write(str(step))
-                    f.flush()
-                    os.fsync(f.fileno())
-                os.replace(latest_tmp, os.path.join(self.dir, "LATEST"))
-                self._gc()
+                with obs.span("ckpt.write", step=int(step), n_arrays=len(flat)):
+                    tmp = os.path.join(self.dir, f"step_{step}.tmp")
+                    final = os.path.join(self.dir, f"step_{step}")
+                    os.makedirs(tmp, exist_ok=True)
+                    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+                    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                        json.dump(manifest, f)
+                    if os.path.exists(final):
+                        shutil.rmtree(final)
+                    os.rename(tmp, final)
+                    latest_tmp = os.path.join(self.dir, "LATEST.tmp")
+                    with open(latest_tmp, "w") as f:
+                        f.write(str(step))
+                        f.flush()
+                        os.fsync(f.fileno())
+                    os.replace(latest_tmp, os.path.join(self.dir, "LATEST"))
+                    self._gc()
             except BaseException as e:  # surfaced by the next wait()
                 self._error = e
                 transferred.set()
@@ -278,7 +286,8 @@ class Checkpointer:
         """Join the in-flight save (if any); re-raises a writer failure so a
         torn snapshot can't silently become the restore point."""
         if self._thread is not None:
-            self._thread.join()
+            with obs.span("ckpt.wait"):
+                self._thread.join()
             self._thread = None
             self._staged = None
         self._raise_pending()

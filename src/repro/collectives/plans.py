@@ -34,6 +34,7 @@ from typing import Any, Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.collectives import transforms as T
 from repro.collectives.executors import make_backend, resolve_op
 from repro.collectives.schedules import Phase, Stage, get_schedule, pivot
@@ -316,12 +317,64 @@ class CollectivePlan:
                 q *= pivot(self._size(ph.axis_index))[0]
         return q
 
+    # -- telemetry ----------------------------------------------------------
+
+    def _emit_stage_telemetry(self, n_bufs: int, nbytes: int) -> None:
+        """Per-stage trace events + message/byte counters (caller gates on
+        ``obs.enabled()``).  Stage structure is static per (schedule, sizes)
+        so this emits at *bind* time — inside jit that is trace time, the
+        only honest place: the traced region cannot host-record per call.
+        Message counts come straight from the schedule (``len(st.pairs)``),
+        so summing ``coll.messages`` over one MRD cycle reproduces the
+        paper's p0*mu0 + 2*(p - 2^floor(log2 p)) closed form — the
+        extra-message prediction lands in ``coll.extra_msgs`` (the shift
+        stages)."""
+        total = extra = vol = 0.0
+        for s_idx, (st, coll, _ai, p) in enumerate(self.bound_stage_table()):
+            msgs = len(st.pairs) * n_bufs
+            per_rank = nbytes / max(p, 1) if self.p is not None else nbytes
+            stage_bytes = len(st.pairs) * st.payload_fraction * per_rank
+            total += msgs
+            vol += stage_bytes
+            if st.kind in ("bshift", "fshift"):
+                extra += msgs
+            obs.instant(
+                "coll.stage",
+                schedule=self.schedule,
+                stage=s_idx,
+                kind=st.kind,
+                collective=coll,
+                p=p,
+                distance=st.distance,
+                msgs=msgs,
+                payload_fraction=st.payload_fraction,
+            )
+        obs.counter("coll.messages", schedule=self.schedule).add(total)
+        obs.counter("coll.extra_msgs", schedule=self.schedule).add(extra)
+        obs.counter("coll.bytes", schedule=self.schedule).add(vol)
+        obs.counter("coll.runs", schedule=self.schedule).add(1)
+
     # -- blocking execution -------------------------------------------------
 
     def run(self, x):
         """Execute all phases.  Allreduce-only plans accept a pytree; plans
         with reduce-scatter/all-gather phases take a single array (device:
         1-D local vector, sim: ``[p, n]`` stacked)."""
+        if not obs.enabled():
+            return self._run_impl(x)
+        nbytes = sum(int(l.size) * l.dtype.itemsize for l in jax.tree.leaves(x))
+        with obs.span(
+            "coll.run",
+            schedule=self.schedule,
+            executor=self.executor,
+            sizes=list(self._sizes()),
+            nbytes=nbytes,
+        ):
+            out = self._run_impl(x)
+        self._emit_stage_telemetry(1, nbytes)
+        return out
+
+    def _run_impl(self, x):
         op = resolve_op(self.op)
         tf = self._transform()
         phases = self._phases()
@@ -372,6 +425,21 @@ class CollectivePlan:
         for the identity transform.
         """
         bufs = list(bufs)
+        if not obs.enabled():
+            return self._run_buffers_impl(bufs)
+        nbytes = sum(int(b.size) * b.dtype.itemsize for b in bufs)
+        with obs.span(
+            "coll.run_buffers",
+            schedule=self.schedule,
+            n_buffers=len(bufs),
+            nbytes=nbytes,
+        ):
+            out = self._run_buffers_impl(bufs)
+        if bufs:
+            self._emit_stage_telemetry(len(bufs), nbytes)
+        return out
+
+    def _run_buffers_impl(self, bufs: list) -> list:
         table = self.bound_stage_table()
         if not table or not bufs:
             return bufs
@@ -574,6 +642,12 @@ class BucketPipeline:
                 f"reduce-scatter phases need buffer len % {self._q} == 0 "
                 f"(pad_quantum), got {buf.shape[-1]} for bucket {key!r}"
             )
+        obs.instant(
+            "coll.pipeline.admit",
+            key=str(key),
+            inflight=len(self._inflight) + 1,
+            nbytes=int(buf.size) * buf.dtype.itemsize,
+        )
         if not self.table:
             self._done[key] = buf
             return
@@ -593,9 +667,14 @@ class BucketPipeline:
     def drain(self) -> dict:
         """Run all remaining stages stage-major; returns {key: buffer}
         and resets the pipeline."""
-        while self._inflight:
-            self.advance()
-        out, self._done = self._done, {}
+        n = len(self._inflight) + len(self._done)
+        with obs.span("coll.pipeline.drain", n_buckets=n):
+            while self._inflight:
+                self.advance()
+            out, self._done = self._done, {}
+        if obs.enabled() and out:
+            nbytes = sum(int(b.size) * b.dtype.itemsize for b in out.values())
+            self.plan._emit_stage_telemetry(len(out), nbytes)
         return out
 
 

@@ -158,9 +158,12 @@ def format_table(reports: list[RooflineReport]) -> str:
     return "\n".join(lines)
 
 
-def save_reports(reports: list[RooflineReport], path: str):
+def save_reports(reports: list[RooflineReport], path: str, extra: dict = None):
+    payload = [r.to_dict() for r in reports]
+    if extra:
+        payload = {"reports": payload, **extra}
     with open(path, "w") as f:
-        json.dump([r.to_dict() for r in reports], f, indent=1)
+        json.dump(payload, f, indent=1)
 
 
 def load_reports(path: str) -> list[dict]:

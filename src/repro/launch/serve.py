@@ -364,7 +364,20 @@ def main(argv=None):
     ap.add_argument("--stall", action="append", metavar="TICK:REPLICA[:FACTOR]",
                     help="slow a replica's heartbeat step time (repeatable)")
     ap.add_argument("--unstall", action="append", metavar="TICK:REPLICA")
+    ap.add_argument("--telemetry", default=None, metavar="SINK[:PATH]",
+                    help="enable the obs subsystem (DESIGN.md S18): "
+                         "null | jsonl[:f.jsonl] | csv[:f.csv] | "
+                         "chrome_trace[:trace.json] (load in Perfetto / "
+                         "chrome://tracing)")
     args = ap.parse_args(argv)
+
+    if args.telemetry:
+        from repro import obs
+
+        try:
+            obs.configure(args.telemetry)
+        except ValueError as e:
+            raise SystemExit(f"--telemetry: {e}")
 
     try:
         get_scheduler(args.scheduler)
@@ -387,10 +400,22 @@ def main(argv=None):
     mesh_dp = 1 if args.continuous else args.dp
     mesh = build_mesh(mesh_dp, args.tp) if needs_model else None
 
-    if args.continuous:
-        _continuous_main(args, cfg, mesh)
-    else:
-        _static_main(args, cfg, mesh)
+    try:
+        if args.continuous:
+            _continuous_main(args, cfg, mesh)
+        else:
+            _static_main(args, cfg, mesh)
+    finally:
+        if args.telemetry:
+            from repro import obs
+
+            t = obs.shutdown()
+            sink = obs.telemetry().sink
+            dest = getattr(sink, "path", None)
+            print(f"# telemetry[{t['sink']}]: {t['spans']} spans, "
+                  f"{t['instants']} instants, "
+                  f"{t['events_dropped'] + t['metrics_dropped']} dropped"
+                  + (f" -> {dest}" if dest else ""))
 
 
 if __name__ == "__main__":

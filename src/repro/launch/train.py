@@ -18,7 +18,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding
 
-from repro import compat
+from repro import compat, obs
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import registry
 from repro.data.pipeline import DataConfig, SyntheticPipeline
@@ -86,7 +86,35 @@ def main(argv=None):
     ap.add_argument("--bucket-bytes", type=int, default=32 * 2**20,
                     help="cap per gradient bucket for the pipelined "
                          "collective engine (0 = one bucket per dtype)")
+    ap.add_argument("--telemetry", default=None, metavar="SINK[:PATH]",
+                    help="enable the obs subsystem (DESIGN.md S18): "
+                         "null | jsonl[:f.jsonl] | csv[:f.csv] | "
+                         "chrome_trace[:trace.json] (load in Perfetto / "
+                         "chrome://tracing)")
     args = ap.parse_args(argv)
+
+    if args.telemetry:
+        from repro import obs
+
+        try:
+            obs.configure(args.telemetry)
+        except ValueError as e:
+            raise SystemExit(f"--telemetry: {e}")
+    try:
+        return _main(args)
+    finally:
+        if args.telemetry:
+            from repro import obs
+
+            t = obs.shutdown()
+            dest = getattr(obs.telemetry().sink, "path", None)
+            print(f"# telemetry[{t['sink']}]: {t['spans']} spans, "
+                  f"{t['instants']} instants, "
+                  f"{t['events_dropped'] + t['metrics_dropped']} dropped"
+                  + (f" -> {dest}" if dest else ""))
+
+
+def _main(args):
 
     cfg = (
         registry.get_smoke_config(args.arch) if args.smoke else registry.get_config(args.arch)
@@ -175,7 +203,14 @@ def main(argv=None):
 
         t0 = time.time()
         for i in range(args.steps):
-            state, metrics = jstep(state, pipe.next_batch())
+            with obs.span("train.step", step=i):
+                state, metrics = jstep(state, pipe.next_batch())
+            if obs.enabled():
+                # the loss is a device array still in flight: the gauge
+                # stores the reference, the writer thread materializes it
+                # at drain — no dispatch fence on the train loop
+                obs.gauge("train.loss").set(metrics["loss"])
+                obs.counter("train.steps").add(1)
             if (i + 1) % args.log_every == 0 or i == 0:
                 print(
                     f"step {int(state['step'])}: loss={float(metrics['loss']):.4f} "
@@ -191,6 +226,12 @@ def main(argv=None):
                     extra={"data": pipe.state_dict()}, block=save_block,
                 )
             if tcfg.monitor and bool(metrics["converged"]):
+                obs.instant(
+                    "monitor.certify",
+                    mode=args.monitor_mode,
+                    step=int(state["step"]),
+                    value=float(metrics["monitor_value"]),
+                )
                 print(
                     f"ConvergenceMonitor ({args.monitor_mode}) certified "
                     f"loss {float(metrics['monitor_value']):.4f} < "

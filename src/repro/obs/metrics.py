@@ -1,0 +1,295 @@
+"""Layer 1 of the observability subsystem: typed *metric instruments* over a
+process-global registry (DESIGN.md S18).
+
+The design constraint is the one PR 8 deferred this subsystem over: the
+recording hot path must never stall device dispatch.  Instruments therefore
+write fixed-size records into a preallocated ring buffer — an append plus
+two integer bumps under the GIL, no locks, no I/O, no host<->device sync —
+and a background *writer thread* drains the ring on a period, aggregates,
+and forwards raw records to the configured sink.  Two consequences:
+
+- a :class:`Gauge` may be handed a live ``jax.Array`` (e.g. a loss still in
+  flight); the hot path stores the reference and the **drain** converts it
+  (``jax.block_until_ready`` fencing happens only at flush, so recording a
+  device value never forces a dispatch fence);
+- when producers outrun the drain the ring *drops* — overflow is counted in
+  :attr:`MetricsRegistry.dropped` and surfaced (``ServeEngine.summary()``
+  reports it), never silent.
+
+Instrument kinds:
+
+- :class:`Counter` — monotonically accumulating totals (``add``/``inc``);
+- :class:`Gauge` — last-value-wins samples (``set``);
+- :class:`Histogram` — streaming count/sum/min/max plus a bounded tail
+  reservoir for percentiles (``observe``).
+
+All three are cheap handles onto their registry; get-or-create them via
+:meth:`MetricsRegistry.counter` / ``gauge`` / ``histogram`` (or the
+module-level conveniences in :mod:`repro.obs`).  Aggregated state is read
+back with :meth:`MetricsRegistry.snapshot`.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, Optional
+
+_KIND_COUNTER = 0
+_KIND_GAUGE = 1
+_KIND_HIST = 2
+
+_KIND_NAMES = {_KIND_COUNTER: "counter", _KIND_GAUGE: "gauge", _KIND_HIST: "histogram"}
+
+
+def _now_ns() -> int:
+    return time.perf_counter_ns()
+
+
+class _Instrument:
+    """Shared handle shape: records go through the owning registry's ring."""
+
+    __slots__ = ("name", "labels", "_reg")
+    kind = -1
+
+    def __init__(self, reg: "MetricsRegistry", name: str, labels: tuple):
+        self._reg = reg
+        self.name = name
+        self.labels = labels
+
+
+class Counter(_Instrument):
+    kind = _KIND_COUNTER
+    __slots__ = ()
+
+    def add(self, value: float = 1.0) -> None:
+        self._reg._record(_KIND_COUNTER, self.name, value, self.labels)
+
+    inc = add
+
+
+class Gauge(_Instrument):
+    kind = _KIND_GAUGE
+    __slots__ = ()
+
+    def set(self, value: Any) -> None:
+        # `value` may be a device array still in flight: stored by reference,
+        # materialized at drain time (flush-only fencing)
+        self._reg._record(_KIND_GAUGE, self.name, value, self.labels)
+
+
+class Histogram(_Instrument):
+    kind = _KIND_HIST
+    __slots__ = ()
+
+    def observe(self, value: float) -> None:
+        self._reg._record(_KIND_HIST, self.name, value, self.labels)
+
+
+class _HistState:
+    __slots__ = ("count", "total", "vmin", "vmax", "tail")
+    TAIL = 512  # bounded reservoir: last N observations, for percentiles
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.vmin = float("inf")
+        self.vmax = float("-inf")
+        self.tail: list = []
+
+    def push(self, v: float):
+        self.count += 1
+        self.total += v
+        if v < self.vmin:
+            self.vmin = v
+        if v > self.vmax:
+            self.vmax = v
+        self.tail.append(v)
+        if len(self.tail) > self.TAIL:
+            del self.tail[: len(self.tail) - self.TAIL]
+
+
+def _materialize(value: Any) -> float:
+    """Convert a drained value to a float — the only place a device value is
+    waited on (``jax.block_until_ready`` fencing at flush, never at record)."""
+    if isinstance(value, (int, float)):
+        return float(value)
+    try:
+        import jax
+
+        if isinstance(value, jax.Array):
+            return float(jax.block_until_ready(value))
+    except Exception:
+        pass
+    return float(value)
+
+
+class MetricsRegistry:
+    """Ring-buffered instrument registry with a background drain thread.
+
+    ``capacity`` bounds the ring (records between drains); ``interval``
+    is the writer thread's drain period in seconds.  The writer starts
+    lazily on the first :meth:`start` (the registry works fully
+    synchronously without it — :meth:`flush` drains inline)."""
+
+    def __init__(self, capacity: int = 65536, interval: float = 0.5):
+        self.capacity = capacity
+        self.interval = interval
+        # ring: preallocated slots, single head counter.  Writers fill
+        # slot (head % capacity) then bump head; the drain thread owns
+        # tail.  Under the GIL each record is one slot store + one int
+        # add — no locks on the hot path.
+        self._ring: list = [None] * capacity
+        self._head = 0
+        self._tail = 0
+        self.dropped = 0
+        self._instruments: Dict[tuple, _Instrument] = {}
+        # aggregated (drained) state
+        self._counters: Dict[tuple, float] = {}
+        self._gauges: Dict[tuple, float] = {}
+        self._hists: Dict[tuple, _HistState] = {}
+        self._drained = 0
+        self._sink = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._drain_lock = threading.Lock()  # drain is not reentrant
+
+    # -- instrument construction (get-or-create, label-keyed) ---------------
+
+    def _get(self, cls, name: str, labels: dict):
+        key = (cls.kind, name, tuple(sorted(labels.items())))
+        inst = self._instruments.get(key)
+        if inst is None:
+            inst = self._instruments[key] = cls(self, name, key[2])
+        return inst
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(Counter, name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(Gauge, name, labels)
+
+    def histogram(self, name: str, **labels) -> Histogram:
+        return self._get(Histogram, name, labels)
+
+    # -- hot path ------------------------------------------------------------
+
+    def _record(self, kind: int, name: str, value: Any, labels: tuple) -> None:
+        head = self._head
+        if head - self._tail >= self.capacity:
+            self.dropped += 1  # ring full: drop, count, never block
+            return
+        self._ring[head % self.capacity] = (_now_ns(), kind, name, value, labels)
+        self._head = head + 1
+
+    # -- drain / background writer -------------------------------------------
+
+    def drain(self) -> int:
+        """Move every pending record from the ring into the aggregated
+        state (and the sink, when one is attached).  Returns the number of
+        records drained.  This is where device values are materialized —
+        the flush-side fence."""
+        with self._drain_lock:
+            head = self._head  # records past this arrive in the next drain
+            n = 0
+            batch = []
+            while self._tail < head:
+                rec = self._ring[self._tail % self.capacity]
+                self._tail += 1
+                if rec is None:  # torn write (racing producer): skip
+                    continue
+                ts, kind, name, value, labels = rec
+                v = _materialize(value)
+                key = (name, labels)
+                if kind == _KIND_COUNTER:
+                    self._counters[key] = self._counters.get(key, 0.0) + v
+                elif kind == _KIND_GAUGE:
+                    self._gauges[key] = v
+                else:
+                    h = self._hists.get(key)
+                    if h is None:
+                        h = self._hists[key] = _HistState()
+                    h.push(v)
+                batch.append((ts, _KIND_NAMES[kind], name, v, labels))
+                n += 1
+            self._drained += n
+            if batch and self._sink is not None:
+                self._sink.write_metrics(batch)
+            return n
+
+    def start(self, sink=None) -> None:
+        """Attach ``sink`` and start the background writer thread (idempotent)."""
+        if sink is not None:
+            self._sink = sink
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._stop.clear()
+
+        def _loop():
+            while not self._stop.wait(self.interval):
+                self.drain()
+            self.drain()
+
+        self._thread = threading.Thread(
+            target=_loop, name="obs-metrics-writer", daemon=True
+        )
+        self._thread.start()
+
+    def stop(self) -> None:
+        """Stop the writer thread (drains once more on the way out)."""
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join()
+            self._thread = None
+        else:
+            self.drain()
+
+    def flush(self) -> int:
+        """Synchronous drain (works with or without the writer thread)."""
+        return self.drain()
+
+    # -- read-back ------------------------------------------------------------
+
+    @staticmethod
+    def _label_str(labels: tuple) -> str:
+        return ",".join(f"{k}={v}" for k, v in labels)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Aggregated view of everything drained so far:
+        ``{"counters": {...}, "gauges": {...}, "histograms": {...}}`` keyed
+        by ``name[label=value,...]``.  Flushes first."""
+        self.flush()
+
+        def keyname(key):
+            name, labels = key
+            return f"{name}[{self._label_str(labels)}]" if labels else name
+
+        hists = {}
+        for key, h in self._hists.items():
+            tail = sorted(h.tail)
+            entry = {
+                "count": h.count,
+                "sum": h.total,
+                "min": h.vmin,
+                "max": h.vmax,
+                "mean": h.total / h.count if h.count else 0.0,
+            }
+            if tail:
+                entry["p50"] = tail[len(tail) // 2]
+                entry["p95"] = tail[min(len(tail) - 1, int(len(tail) * 0.95))]
+            hists[keyname(key)] = entry
+        return {
+            "counters": {keyname(k): v for k, v in self._counters.items()},
+            "gauges": {keyname(k): v for k, v in self._gauges.items()},
+            "histograms": hists,
+        }
+
+    def summary(self) -> Dict[str, int]:
+        """Health of the pipeline itself (satellite: overflow must be
+        observable, never silent)."""
+        return {
+            "recorded": self._drained + (self._head - self._tail),
+            "drained": self._drained,
+            "pending": self._head - self._tail,
+            "dropped": self.dropped,
+        }

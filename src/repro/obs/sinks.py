@@ -1,0 +1,130 @@
+"""Layer 3 of the observability subsystem: output *sinks* behind a SINKS
+registry (DESIGN.md S18), mirroring SCHEDULES / DETECTION_PROTOCOLS /
+TERMINATION.
+
+A sink receives drained metric batches (``write_metrics``) and, at
+shutdown, the tracer for final export (``close``).  Selection is by spec
+string — ``"jsonl:telemetry.jsonl"``, ``"chrome_trace:out.json"``,
+``"csv"``, ``"null"`` — parsed by :func:`parse_spec` and resolved by
+:func:`get_sink`; launchers expose the spec verbatim as ``--telemetry``.
+
+Built-ins:
+
+- ``null`` — drop everything (the overhead-gate baseline);
+- ``jsonl`` — one JSON object per drained metric record, streamed;
+- ``csv`` — same records as ``ts_ns,kind,name,value,labels`` rows;
+- ``chrome_trace`` — buffers nothing per-record; on close writes the
+  tracer's Perfetto-loadable JSON to the spec path.
+"""
+
+from __future__ import annotations
+
+import csv
+import json
+from typing import Callable, Dict, List, Optional, Tuple
+
+SINKS: Dict[str, Callable[..., "Sink"]] = {}
+
+
+def register_sink(name: str):
+    def deco(fn):
+        SINKS[name] = fn
+        return fn
+
+    return deco
+
+
+class Sink:
+    """Base sink: ignores everything. Subclasses override what they need."""
+
+    name = "null"
+
+    def write_metrics(self, batch: List[tuple]) -> None:
+        pass
+
+    def close(self, tracer=None) -> None:
+        pass
+
+
+@register_sink("null")
+class NullSink(Sink):
+    name = "null"
+
+
+@register_sink("jsonl")
+class JsonlSink(Sink):
+    name = "jsonl"
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or "telemetry.jsonl"
+        self._f = open(self.path, "w")
+
+    def write_metrics(self, batch: List[tuple]) -> None:
+        for ts, kind, name, value, labels in batch:
+            self._f.write(
+                json.dumps(
+                    {
+                        "ts_ns": ts,
+                        "kind": kind,
+                        "name": name,
+                        "value": value,
+                        "labels": dict(labels) if labels else {},
+                    }
+                )
+                + "\n"
+            )
+
+    def close(self, tracer=None) -> None:
+        if tracer is not None:
+            self._f.write(json.dumps({"trace_summary": tracer.summary()}) + "\n")
+        self._f.close()
+
+
+@register_sink("csv")
+class CsvSink(Sink):
+    name = "csv"
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or "telemetry.csv"
+        self._f = open(self.path, "w", newline="")
+        self._w = csv.writer(self._f)
+        self._w.writerow(["ts_ns", "kind", "name", "value", "labels"])
+
+    def write_metrics(self, batch: List[tuple]) -> None:
+        for ts, kind, name, value, labels in batch:
+            self._w.writerow(
+                [ts, kind, name, value, ";".join(f"{k}={v}" for k, v in labels)]
+            )
+
+    def close(self, tracer=None) -> None:
+        self._f.close()
+
+
+@register_sink("chrome_trace")
+class ChromeTraceSink(Sink):
+    """Per-record metrics are dropped; the trace is written once at close.
+    Pair with ``MetricsRegistry.snapshot()`` for the aggregate view."""
+
+    name = "chrome_trace"
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or "trace.json"
+
+    def close(self, tracer=None) -> None:
+        if tracer is not None:
+            tracer.write_chrome_trace(self.path)
+
+
+def parse_spec(spec: str) -> Tuple[str, Optional[str]]:
+    """``"name[:path]"`` → ``(name, path_or_None)``.  Unknown names raise
+    with the registry contents, matching the other registries' errors."""
+    name, _, path = spec.partition(":")
+    if name not in SINKS:
+        raise ValueError(f"unknown telemetry sink {name!r}; have {sorted(SINKS)}")
+    return name, (path or None)
+
+
+def get_sink(spec: str) -> Sink:
+    name, path = parse_spec(spec)
+    cls = SINKS[name]
+    return cls() if name == "null" else cls(path)

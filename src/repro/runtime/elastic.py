@@ -45,7 +45,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro import compat
+from repro import compat, obs
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.collectives import plans
 from repro.runtime.fault_tolerance import (
@@ -247,30 +247,11 @@ class ElasticServeController:
             self.detector.heartbeat(r, now=now, step_time=step_time)
 
     def _load(self) -> LoadSnapshot:
-        """Deterministic tick-domain load picture for autoscaling policies:
-        queue depth, TTFT-SLA pressure (near = past half the deadline while
-        still queued), and free capacity under the engine's
-        ``slots_per_replica`` model."""
-        eng = self.engine
-        tick = eng.tick
-        near = overdue = 0
-        for r in eng.queue:
-            if r.sla is None:
-                continue
-            waited = tick - r.arrival
-            if waited > r.sla:
-                overdue += 1
-            elif 2 * waited >= r.sla:
-                near += 1
-        return LoadSnapshot(
-            tick=tick,
-            queue_depth=len(eng.queue),
-            sla_near=near,
-            sla_overdue=overdue,
-            free_slots=len(eng._free_slots()),
-            usable_slots=eng.usable_slots,
-            dp=eng.dp,
-        )
+        """Load picture for autoscaling policies — built by the *engine*
+        (:meth:`ServeEngine.load_snapshot`), which also publishes the same
+        numbers as telemetry gauges: the trace and the policy see one
+        snapshot, never two divergent computations."""
+        return self.engine.load_snapshot()
 
     # -- one controller step -------------------------------------------------
 
@@ -297,6 +278,14 @@ class ElasticServeController:
                 self.health[r] = "ok"
                 self.detector.heartbeat(r, now=now)
         decision = clamped
+        if decision.action not in ("none", "abort"):
+            obs.instant(
+                "elastic.decision",
+                action=decision.action,
+                reason=decision.reason,
+                tick=self.engine.tick,
+                dp=self.replicas.dp,
+            )
         if decision.action == "abort":
             raise RuntimeError(f"elastic policy abort: {decision.reason}")
         if decision.action == "shrink":
@@ -511,6 +500,21 @@ class ElasticTrainer:
         """Execute a policy decision: rebuild the mesh, migrate state in
         place (or restore from checkpoint when no migration path exists),
         rebuild the step functions, and record the :class:`ResizeEvent`."""
+        with obs.span(
+            "train.resize", action=decision.action, reason=decision.reason
+        ) as sp:
+            state = self._resize_impl(state, decision)
+            if sp is not None:
+                ev = self.resizes[-1]
+                sp.update(
+                    old_dp=ev.old_dp,
+                    new_dp=ev.new_dp,
+                    step=ev.step,
+                    restored=ev.restored_from_checkpoint,
+                )
+        return state
+
+    def _resize_impl(self, state, decision: ResizeDecision):
         if len(self.resizes) >= self.cfg.max_restarts:
             raise RuntimeError("resize budget exhausted")
         old_mesh = self.mesh
@@ -545,9 +549,10 @@ class ElasticTrainer:
             from repro.distributed import gradsync
 
             cfg, tcfg = self.train_cfgs
-            state = gradsync.migrate_state(
-                cfg, tcfg, old_mesh, new_mesh, state, keep
-            )
+            with obs.span("train.resize.migrate", action=decision.action):
+                state = gradsync.migrate_state(
+                    cfg, tcfg, old_mesh, new_mesh, state, keep
+                )
             pipe_state = self.pipe.state_dict()
             self.mesh = new_mesh
             self._build()
@@ -559,13 +564,14 @@ class ElasticTrainer:
                     # protocol-level param transfer to the joiners: MRD
                     # broadcast at the new (non-power-of-two) extent —
                     # bit-exact, so survivors' params are untouched
-                    state["params"] = jax.device_put(
-                        mrd_broadcast(
-                            state["params"], self.mesh,
-                            _dp_axes(self.mesh), src=0,
-                        ),
-                        shardings["params"],
-                    )
+                    with obs.span("train.resize.broadcast"):
+                        state["params"] = jax.device_put(
+                            mrd_broadcast(
+                                state["params"], self.mesh,
+                                _dp_axes(self.mesh), src=0,
+                            ),
+                            shardings["params"],
+                        )
         else:
             # legacy path (opaque step factory): full checkpoint round-trip
             if self.ck is None:

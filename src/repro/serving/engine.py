@@ -29,8 +29,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.asynchrony.protocols import RES_INIT
 from repro.runtime.elastic import ResizeEvent
+from repro.runtime.policies import LoadSnapshot
 from repro.serving.schedulers import get_scheduler
 from repro.serving.termination import (
     TerminationConfig,
@@ -300,6 +302,44 @@ class ServeEngine:
             s for s in range(self.usable_slots) if self.slot_req[s] is None
         ]
 
+    def load_snapshot(self) -> LoadSnapshot:
+        """Deterministic tick-domain load picture: queue depth, TTFT-SLA
+        pressure (near = past half the deadline while still queued), and
+        free capacity under the ``slots_per_replica`` model.
+
+        This is the *single* load surface: the autoscaler
+        (``ElasticServeController._load``) reads it for resize decisions,
+        and — when telemetry is on — the same numbers land as gauges, so
+        the trace shows exactly the pressure the policy acted on.
+        """
+        tick = self.tick
+        near = overdue = 0
+        for r in self.queue:
+            if r.sla is None:
+                continue
+            waited = tick - r.arrival
+            if waited > r.sla:
+                overdue += 1
+            elif 2 * waited >= r.sla:
+                near += 1
+        snap = LoadSnapshot(
+            tick=tick,
+            queue_depth=len(self.queue),
+            sla_near=near,
+            sla_overdue=overdue,
+            free_slots=len(self._free_slots()),
+            usable_slots=self.usable_slots,
+            dp=self.dp,
+        )
+        if obs.enabled():
+            obs.gauge("serve.queue_depth").set(snap.queue_depth)
+            obs.gauge("serve.sla_near").set(snap.sla_near)
+            obs.gauge("serve.sla_overdue").set(snap.sla_overdue)
+            obs.gauge("serve.free_slots").set(snap.free_slots)
+            obs.gauge("serve.usable_slots").set(snap.usable_slots)
+            obs.gauge("serve.dp").set(snap.dp)
+        return snap
+
     def _commit(self, tree):
         """Pin replicated control/termination state to the workload's mesh.
 
@@ -344,17 +384,27 @@ class ServeEngine:
             return None
         kind = "grow" if any(k is None for k in keep) else "shrink"
 
-        mig = getattr(self.workload, "migrate_dp", None)
-        if mig is not None:
-            mig(new_dp)
-        old_tstate = self.tstate
-        self.dp = new_dp
-        self._build_fused()  # new tcfg -> new jit cache entry per extent
-        self.tstate = self._commit(
-            self.term.migrate(old_tstate, keep, self.tcfg, self.slots)
-        )
-        if kind == "grow":
-            self._broadcast_to_joiners()
+        with obs.span(
+            "serve.resize",
+            kind=kind,
+            old_dp=old_dp,
+            new_dp=new_dp,
+            tick=self.tick,
+            reason=reason,
+        ):
+            mig = getattr(self.workload, "migrate_dp", None)
+            if mig is not None:
+                mig(new_dp)
+            old_tstate = self.tstate
+            self.dp = new_dp
+            self._build_fused()  # new tcfg -> new jit cache entry per extent
+            with obs.span("serve.resize.migrate", kind=kind):
+                self.tstate = self._commit(
+                    self.term.migrate(old_tstate, keep, self.tcfg, self.slots)
+                )
+            if kind == "grow":
+                with obs.span("serve.resize.broadcast", new_dp=new_dp):
+                    self._broadcast_to_joiners()
         ev = ResizeEvent(
             kind=kind, step=self.tick, old_dp=old_dp, new_dp=new_dp,
             keep=keep, device_ids=(), reason=reason,
@@ -421,6 +471,20 @@ class ServeEngine:
 
     # -- one tick -----------------------------------------------------------
 
+    def _after_admit(self, req, slot: int, now: int, t0: float) -> None:
+        """Slot bookkeeping for a just-admitted request."""
+        self.slot_req[slot] = req
+        self._active[slot] = True
+        self._admit_tick[slot] = now
+        # llm: the prefill's argmax token; fixedpoint: no iteration yet
+        self._new_tokens[slot] = self.workload.prefill_tokens
+        self._max_new[slot] = self.workload.clamp_max_new(req)
+        self._eos[slot] = req.eos
+        self._eps[slot] = self.cfg.eps if req.eps is None else req.eps
+        self._t_queue[slot] = getattr(req, "_t_submit", t0)
+        self._t_first[slot] = time.perf_counter()
+        self._ctrl_dirty = True
+
     def step(self) -> np.ndarray:
         """Advance one tick; returns the retired-slot mask ``[S]``."""
         if self._t_start is None:
@@ -454,31 +518,26 @@ class ServeEngine:
             self.scheduler.order(list(self.queue), now)
             if self.queue and free else []
         )
-        for req in ordered:
-            if not free:
-                break
-            quota = self._quotas.get(req.tenant, 0)
-            if quota and inflight.get(req.tenant, 0) >= quota:
-                continue  # tenant at its admission quota: req stays queued
-            if gate is not None and not gate(req):
-                continue  # out of cache blocks: req waits in the queue
-            slot = free.pop(0)
-            self.queue.remove(req)
-            if self._quotas:
-                inflight[req.tenant] = inflight.get(req.tenant, 0) + 1
-            t0 = time.perf_counter()
-            self.workload.admit(req, slot, now)
-            self.slot_req[slot] = req
-            self._active[slot] = True
-            self._admit_tick[slot] = now
-            # llm: the prefill's argmax token; fixedpoint: no iteration yet
-            self._new_tokens[slot] = self.workload.prefill_tokens
-            self._max_new[slot] = self.workload.clamp_max_new(req)
-            self._eos[slot] = req.eos
-            self._eps[slot] = self.cfg.eps if req.eps is None else req.eps
-            self._t_queue[slot] = getattr(req, "_t_submit", t0)
-            self._t_first[slot] = time.perf_counter()
-            self._ctrl_dirty = True
+        n_admitted = 0
+        with obs.span("serve.admit", tick=now, queue_depth=len(self.queue)) as sp:
+            for req in ordered:
+                if not free:
+                    break
+                quota = self._quotas.get(req.tenant, 0)
+                if quota and inflight.get(req.tenant, 0) >= quota:
+                    continue  # tenant at its admission quota: req stays queued
+                if gate is not None and not gate(req):
+                    continue  # out of cache blocks: req waits in the queue
+                slot = free.pop(0)
+                self.queue.remove(req)
+                if self._quotas:
+                    inflight[req.tenant] = inflight.get(req.tenant, 0) + 1
+                t0 = time.perf_counter()
+                self.workload.admit(req, slot, now)
+                self._after_admit(req, slot, now, t0)
+                n_admitted += 1
+            if sp is not None:
+                sp["n_admitted"] = n_admitted
 
         if not self._active.any():
             # nothing in flight: fast-forward the virtual clock to the next
@@ -514,29 +573,33 @@ class ServeEngine:
             klim = max(1, min(klim, nxt - now))
         if self.cfg.max_admit_per_tick and self.queue and self._free_slots():
             klim = 1  # rate-limited admissions resume next tick
-        try:
-            final = self._jfused(
-                self.workload.params, self.workload.wstate, self.tstate,
-                self._ctrl, jnp.int32(now), jnp.int32(klim),
-            )
-        except Exception:
-            self._abort_inflight()
-            raise
-        self.workload.wstate = final["wstate"]
-        self.tstate = final["tstate"]
-        self._ctrl = final["ctrl"]
-        n_ticks = int(final["i"])
-        # convert whole buffers, slice on host: device-side slicing at a
-        # data-dependent length would compile one kernel per distinct length
-        active_buf = np.asarray(final["active_buf"])[:n_ticks]
-        tokens_buf = np.asarray(final["tokens_buf"])[:n_ticks]
+        with obs.span("serve.tick", tick=now, klim=klim, dp=self.dp) as sp:
+            try:
+                final = self._jfused(
+                    self.workload.params, self.workload.wstate, self.tstate,
+                    self._ctrl, jnp.int32(now), jnp.int32(klim),
+                )
+            except Exception:
+                self._abort_inflight()
+                raise
+            self.workload.wstate = final["wstate"]
+            self.tstate = final["tstate"]
+            self._ctrl = final["ctrl"]
+            n_ticks = int(final["i"])
+            # convert whole buffers, slice on host: device-side slicing at a
+            # data-dependent length would compile one kernel per distinct
+            # length
+            active_buf = np.asarray(final["active_buf"])[:n_ticks]
+            tokens_buf = np.asarray(final["tokens_buf"])[:n_ticks]
 
-        for k in range(n_ticks):
-            act = active_buf[k]
-            self._new_tokens[act] += 1
-            self.workload.collect_tick(tokens_buf[k], act)
-            self._occupancy_sum += float(act.sum()) / self.slots
-            self._occupancy_ticks += 1
+            for k in range(n_ticks):
+                act = active_buf[k]
+                self._new_tokens[act] += 1
+                self.workload.collect_tick(tokens_buf[k], act)
+                self._occupancy_sum += float(act.sum()) / self.slots
+                self._occupancy_ticks += 1
+            if sp is not None:
+                sp["n_ticks"] = n_ticks
 
         # 4. retire: by construction only the last executed tick can retire
         # (the device loop exits right after it)
@@ -550,12 +613,22 @@ class ServeEngine:
             certified = np.asarray(self.tstate["certified"])
             t_done = time.perf_counter()
             for slot in np.nonzero(out_mask)[0]:
+                req = self.slot_req[slot]
+                obs.instant(
+                    "serve.retire",
+                    slot=int(slot),
+                    tick=now + last,
+                    forced=bool(forced[slot]),
+                    request=req.id if req is not None else None,
+                )
                 self._collect(int(slot), now + last, certified,
                               bool(forced[slot]), t_done,
                               at_capacity=bool(at_cap[slot]))
         self.tick = now + n_ticks
         self._replica_ticks += n_ticks * self.dp
         self._t_last = time.perf_counter()
+        if obs.enabled():
+            self.load_snapshot()  # records the load gauges for this step
         return out_mask
 
     def _collect(self, slot, now, certified, was_forced, t_done,
@@ -666,6 +739,10 @@ class ServeEngine:
             "forced_at_capacity": self._forced_at_capacity,
             "retried": self._retried,
             "resizes": len(self.resizes),
+            # pipeline health of the telemetry plane itself — span counts
+            # and ring-buffer overflow are surfaced here so a saturated
+            # tracer is observable, never silent
+            "telemetry": obs.summary(),
         }
 
 
